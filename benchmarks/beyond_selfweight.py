@@ -1,0 +1,32 @@
+"""Beyond-paper ablation: self-weight λ in the personalized aggregation.
+
+Paper eqn (3) EXCLUDES the client's own C from its aggregate
+(C̄_i = Σ_{j≠i} w_ij C_j) — each round a client's core factor is entirely
+replaced by other clients' factors.  We add λ·C_i self-mixing
+(aggregation.personalized_weights(self_weight=λ)) and sweep λ."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+LAMBDAS = [0.0, 0.25, 0.5]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 15 if quick else 25
+    lams = [0.0, 0.5] if quick else LAMBDAS
+    print("# beyond-paper: self-weight λ in eqn (3)  (λ=0 = faithful)")
+    print("lambda,mean_acc,min_acc")
+    out = {}
+    for lam in lams:
+        r = run_method("celora", rounds=rounds, self_weight=lam)
+        out[lam] = r
+        print(f"{lam},{r['mean_acc']:.3f},{r['min_acc']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

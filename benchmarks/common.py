@@ -1,0 +1,83 @@
+"""Shared setup for the federated benchmarks (paper §IV experiments at CPU
+scale): a small pre-trained backbone + Dirichlet-partitioned synthetic
+classification data, mirroring the paper's 10-client α=0.5 default."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.fed_model import FedTask  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+from repro.data import partition, synthetic  # noqa: E402
+from repro.data.pipeline import Loader  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+
+N_CLASSES = 6
+SEQ = 24
+VOCAB = 256
+
+
+def bench_cfg(rank: int = 4) -> ModelConfig:
+    return ModelConfig(
+        name="fedbench", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=VOCAB,
+        rope_theta=1e4, layer_pattern=("attn",), param_dtype="float32",
+        lora_rank=rank)
+
+
+_TASK_CACHE: dict = {}
+
+
+def make_task(rank: int = 4, seed: int = 0, pretrain_steps: int = 300) -> FedTask:
+    key = (rank, seed, pretrain_steps)
+    if key in _TASK_CACHE:
+        return _TASK_CACHE[key]
+    cfg = bench_cfg(rank)
+    pre = synthetic.make_classification_data(seed + 2, 2048, SEQ, VOCAB,
+                                             N_CLASSES, class_sep=1.2)
+    loader = Loader({"tokens": pre.tokens, "labels": pre.labels}, 32,
+                    seed=9)
+    task = FedTask.create(jax.random.key(seed), cfg, N_CLASSES,
+                          pretrain_batches=loader.batches(pretrain_steps))
+    _TASK_CACHE[key] = task
+    return task
+
+
+DRIFT = 1.5   # concept shift between latent client groups (paper's non-IID)
+
+
+def make_clients(n_clients: int = 10, alpha: float = 0.5, seed: int = 0,
+                 n_train: int = 1200, n_test: int = 1500,
+                 drift: float = DRIFT):
+    ctrain, ctest, _ = synthetic.make_federated_classification(
+        seed, n_clients, n_train // n_clients, max(n_test // n_clients, 64),
+        SEQ, VOCAB, N_CLASSES, alpha=alpha, drift=drift, n_groups=3,
+        class_sep=1.2)
+    return ctrain, ctest
+
+
+def run_method(method: str, *, rounds: int = 10, n_clients: int = 10,
+               alpha: float = 0.5, rank: int = 4, local_steps: int = 8,
+               seed: int = 0, n_train: int = 1200, n_test: int = 1500,
+               drift: float = None, **fed_kw) -> dict:
+    task = make_task(rank=rank, seed=seed)
+    ctrain, ctest = make_clients(n_clients, alpha, seed,
+                                 n_train=n_train, n_test=n_test,
+                                 drift=DRIFT if drift is None else drift)
+    fed = FedConfig(method=method, n_clients=n_clients, rounds=rounds,
+                    local_steps=local_steps, batch_size=16, lr=1e-2,
+                    seed=seed, **fed_kw)
+    t0 = time.time()
+    out = run_federated(task, fed, ctrain, ctest)
+    out["wall_s"] = time.time() - t0
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,130 @@
+"""Cross-pod communication analysis — the paper's Table-III claim at the
+SYSTEM level.
+
+Parses the compiled multi-pod HLO and splits collective bytes into
+cross-pod (device groups spanning both pods, i.e. ids < 256 and ≥ 256
+together) vs intra-pod.  Compares:
+
+- standard ``train_step`` on (pod,data,model): grads/params sync across the
+  pod axis → the FedAvg-over-everything analogue;
+- ``fed_round_step``: A/B/opt stay pod-local; ONLY the C matrices cross —
+  cross-pod bytes should be ≈ m·Σr² per round.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from roofline import _shape_bytes  # noqa: E402
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+PODSIZE = 256
+
+
+def _iota_groups(spec: str):
+    """Parse v2 iota replica_groups '[G,S]<=[d0,d1,…]T(p…)' → (G,S) array."""
+    import numpy as np
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", spec)
+    if not m:
+        return None
+    g, s, dims_s, perm_s = m.groups()
+    dims = [int(x) for x in dims_s.split(",")]
+    arr = np.arange(int(np.prod(dims))).reshape(dims)
+    if perm_s:
+        arr = arr.transpose([int(x) for x in perm_s.split(",")])
+    return arr.reshape(int(g), int(s))
+
+
+def _groups_cross_pod(line: str) -> bool | None:
+    m = re.search(r"replica_groups=(\[[^;\s]+)", line)
+    if m:
+        grid = _iota_groups(m.group(1))
+        if grid is not None:
+            return bool(((grid.min(1) < PODSIZE) &
+                         (grid.max(1) >= PODSIZE)).any())
+        return None
+    if "replica_groups={}" in line:
+        return True      # empty groups = ALL devices = spans pods
+    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", line)
+    if not m:
+        return None
+    txt = m.group(1)
+    for grp in re.findall(r"\{([0-9, ]+)\}", "{" + txt + "}"):
+        ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if ids and (min(ids) < PODSIZE <= max(ids)):
+            return True
+    return False
+
+
+def analyze(hlo_path: Path) -> dict:
+    """Split collectives into intra-pod / cross-pod; cross-pod gathers of the
+    pod-REPLICATED embedding table (GSPMD free group choice on equivalent
+    replicas — avoidable with per-axis collective device sets on real DCN)
+    are reported separately as `cross_pod_artifact_bytes`."""
+    with gzip.open(hlo_path, "rt") as f:
+        txt = f.read()
+    cross = intra = unknown = artifact = 0
+    per_coll: dict[str, int] = {}
+    for line in txt.splitlines():
+        mm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+(all-gather|all-reduce|"
+                       r"reduce-scatter|all-to-all|collective-permute)"
+                       r"(?:-start)?\(", line)
+        if not mm:
+            continue
+        shapes = re.findall(r"(\w+\[[0-9,]*\])", line)
+        b = _shape_bytes(shapes[0]) if shapes else 0
+        kind = _groups_cross_pod(line)
+        if kind is True:
+            if re.search(r'op_name="[^"]*(jit\(_take\)|embed)', line):
+                artifact += b
+            else:
+                cross += b
+                per_coll[mm.group(1)] = per_coll.get(mm.group(1), 0) + b
+        elif kind is False:
+            intra += b
+        else:
+            unknown += b
+    return {"file": hlo_path.name, "cross_pod_bytes": cross,
+            "cross_pod_artifact_bytes": artifact,
+            "intra_pod_bytes": intra, "unknown_bytes": unknown,
+            "cross_pod_by_op": per_coll}
+
+
+def main(quick: bool = False) -> dict:
+    print("# cross-pod collective bytes (per compiled step, per device)")
+    print("step,cross_pod_algorithmic,cross_pod_artifact(replicated-embed),"
+          "intra_pod,unknown")
+    out = {}
+    cases = [
+        ("fed-100m standard train (pods sync everything)",
+         ART / "2x16x16" / "fed-100m__train_4k.hlo.gz"),
+        ("fed-100m CE-LoRA fed round (C only)",
+         ART / "2x16x16_fed" / "fed-100m__train_4k.hlo.gz"),
+        ("qwen2.5-14b CE-LoRA fed round (C only)",
+         ART / "2x16x16_fed" / "qwen2.5-14b__train_4k.hlo.gz"),
+    ]
+    for label, path in cases:
+        if not path.exists():
+            print(f"{label},MISSING — run repro.launch.dryrun --fed")
+            continue
+        r = analyze(path)
+        out[label] = r
+        print(f"{label},{r['cross_pod_bytes']},"
+              f"{r['cross_pod_artifact_bytes']},{r['intra_pod_bytes']},"
+              f"{r['unknown_bytes']}")
+    if len(out) >= 2:
+        ks = list(out)
+        std = out[ks[0]]["cross_pod_bytes"]
+        fed = out[ks[1]]["cross_pod_bytes"]
+        if fed:
+            print(f"# cross-pod reduction (std train vs CE-LoRA round): "
+                  f"{std / fed:.0f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 10 — accuracy and communication vs LoRA rank r (comm grows
+O(r²) for CE-LoRA vs O(r) for FedPETuning)."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+RANKS = [2, 4, 8, 16]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 12 if quick else 20
+    ranks = [2, 8] if quick else RANKS
+    print("# Fig 10 — rank sweep (celora)")
+    print("rank,mean_acc,min_acc,uplink_floats(O(r^2))")
+    out = {}
+    for r_ in ranks:
+        r = run_method("celora", rounds=rounds, rank=r_)
+        out[r_] = r
+        print(f"{r_},{r['mean_acc']:.3f},{r['min_acc']:.3f},"
+              f"{r['uplink_floats_per_round']}")
+    # O(r²) check
+    if 2 in out and 8 in out:
+        ratio = out[8]["uplink_floats_per_round"] / out[2]["uplink_floats_per_round"]
+        assert abs(ratio - 16.0) < 1e-6, ratio   # (8/2)² = 16
+        print("# O(r²) communication scaling verified (r 2→8 ⇒ 16×)")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,37 @@
+"""Paper Fig. 5 — DLG gradient-inversion resistance.
+
+Expectation (paper claim): token-recovery F1 ordering
+full fine-tune > FedPETuning (A,B) > FFA-LoRA (B) > CE-LoRA (C, r² floats).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.privacy import run_dlg_experiment  # noqa: E402
+
+
+def main(quick: bool = False) -> dict:
+    steps = 150 if quick else 500
+    seeds = [0] if quick else [0, 1, 2]
+    print("# Fig 5 — DLG attack token-recovery (lower F1 = better privacy)")
+    print("method,precision,recall,f1")
+    agg: dict = {}
+    for s in seeds:
+        res = run_dlg_experiment(seed=s, n_steps=steps)
+        for m, v in res.items():
+            agg.setdefault(m, []).append(v["f1"])
+    import numpy as np
+    out = {}
+    for m, f1s in agg.items():
+        res = run_dlg_experiment(seed=seeds[0], n_steps=steps)[m]
+        out[m] = {"f1": float(np.mean(f1s)), **res}
+        print(f"{m},{res['precision']:.3f},{res['recall']:.3f},"
+              f"{np.mean(f1s):.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

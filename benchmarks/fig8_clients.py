@@ -1,0 +1,30 @@
+"""Paper Fig. 8 — accuracy vs number of clients (paper: 10/20/50/100;
+CPU budget: 5/10/20)."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+COUNTS = [5, 10, 20]
+METHODS = ["fedpetuning", "fdlora", "celora"]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 12 if quick else 20
+    counts = [5, 10] if quick else COUNTS
+    print("# Fig 8 — accuracy vs client count")
+    print("n_clients,method,mean_acc,min_acc")
+    out = {}
+    for m_clients in counts:
+        for m in METHODS:
+            r = run_method(m, rounds=rounds, n_clients=m_clients)
+            out[(m_clients, m)] = r
+            print(f"{m_clients},{m},{r['mean_acc']:.3f},{r['min_acc']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

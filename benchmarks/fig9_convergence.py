@@ -1,0 +1,30 @@
+"""Paper Fig. 9 — convergence: training loss vs communication round."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+METHODS = ["fedpetuning", "fdlora", "celora"]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 15 if quick else 25
+    print("# Fig 9 — loss per round")
+    out = {}
+    for m in METHODS:
+        r = run_method(m, rounds=rounds)
+        out[m] = [h.train_loss for h in r["history"]]
+        losses = ",".join(f"{v:.3f}" for v in out[m])
+        print(f"{m},{losses}")
+    # CE-LoRA should converge at least as fast as FedPETuning
+    n = min(4, rounds - 1)
+    print(f"# loss@round{n}: celora {out['celora'][n]:.3f} "
+          f"fedpetuning {out['fedpetuning'][n]:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

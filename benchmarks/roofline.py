@@ -1,0 +1,202 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+    compute term    = FLOPs / (chips · 197e12 bf16 FLOP/s)
+    memory term     = HBM bytes / (chips · 819e9 B/s)
+    collective term = collective bytes per chip / 50e9 B/s per ICI link
+
+FLOPs / HBM bytes come from the ANALYTIC model (benchmarks/analytic.py) —
+XLA cost_analysis counts while-loop bodies once, so scan-over-layers HLO
+numbers undercount by ~n_layers; they are reported as cross-checks.
+
+Collective bytes are parsed from the compiled (post-SPMD) HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+operand is summed, with ops inside while-loop bodies multiplied by the
+loop trip count (parsed from the loop-condition constant).
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import math
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from analytic import count_params, step_bytes, step_flops  # noqa: E402
+from repro.launch.steps import SHAPES, shape_variant  # noqa: E402
+from repro.models.config import get_config  # noqa: E402
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "f64": 8, "c64": 8}
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _shape_bytes(sig: str) -> int:
+    """'bf16[16,128,8]{...}' → bytes."""
+    m = re.match(r"(\w+)\[([0-9,]*)\]", sig)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective bytes per device, trip-count corrected.
+
+    The compiled module is the per-device program; operand sizes of
+    collective ops are per-device shard sizes.  Returns totals by op type
+    plus the grand total.
+    """
+    # 1) split into computations; note while-loop bodies and trip counts
+    comps: dict[str, str] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if m and ("{" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            comps[cur] = ""
+        elif cur is not None:
+            comps[cur] = comps[cur] + line + "\n"
+
+    # 2) find while ops: body=..., condition=..., and trip count from the
+    #    condition computation's compare-against constant
+    trip: dict[str, int] = {}
+    for cname, body in comps.items():
+        for m in re.finditer(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", body):
+            cond, wbody = m.groups()
+            cnd_txt = comps.get(cond, "")
+            cm = re.search(r"constant\((\d+)\)", cnd_txt)
+            count = int(cm.group(1)) if cm else 1
+            trip[wbody] = max(trip.get(wbody, 1), count)
+
+    # propagate: a computation called from a while body inherits its trips
+    def comp_trip(name, seen=()):
+        return trip.get(name, 1)
+
+    out = {c: 0.0 for c in _COLL}
+    per_comp_coll: dict[str, dict] = {}
+    for cname, body in comps.items():
+        local = {c: 0.0 for c in _COLL}
+        for line in body.splitlines():
+            for coll in _COLL:
+                if re.search(rf"=\s*(?:\([^)]*\)|\S*)\s*{coll}"
+                             rf"(?:-start|-done)?\(", line) \
+                   or f" {coll}(" in line:
+                    # tuple-typed collectives: sum every element left of the op
+                    lhs = line.split(coll)[0]
+                    shapes = re.findall(r"(\w+\[[0-9,]*\])", lhs)
+                    if not shapes:
+                        shapes = re.findall(r"(\w+\[[0-9,]*\])", line)[:1]
+                    for sh in shapes:
+                        local[coll] += _shape_bytes(sh)
+                    break
+        per_comp_coll[cname] = local
+
+    # 3) nested while: multiply by product of enclosing trip counts — we
+    #    approximate one level (body name → trip), plus direct calls from
+    #    bodies with known multipliers via fusion/call lines
+    for cname, local in per_comp_coll.items():
+        mult = comp_trip(cname)
+        for coll, b in local.items():
+            out[coll] += b * mult
+
+    out["total"] = sum(out[c] for c in _COLL)
+    out["while_trips"] = {k: v for k, v in trip.items() if v > 1}
+    return out
+
+
+def roofline_row(arch: str, shape_name: str, mesh_tag: str = "16x16") -> dict:
+    cfg = shape_variant(get_config(arch), shape_name)
+    chips = 512 if mesh_tag.startswith("2x") else 256
+    fl = step_flops(cfg, shape_name)
+    by = step_bytes(cfg, shape_name)
+    pc = count_params(cfg)
+
+    t_compute = fl["total"] / (chips * PEAK_FLOPS)
+    t_memory = by["total"] / (chips * HBM_BW)
+
+    rec_path = ART / mesh_tag / f"{arch}__{shape_name}.json"
+    hlo_path = ART / mesh_tag / f"{arch}__{shape_name}.hlo.gz"
+    coll_bytes = float("nan")
+    hlo_flops = hlo_mem = float("nan")
+    compiled = {}
+    if rec_path.exists():
+        compiled = json.loads(rec_path.read_text())
+        hlo_flops = compiled.get("cost", {}).get("flops", float("nan"))
+        hlo_mem = compiled.get("memory", {}).get("temp_size_in_bytes",
+                                                 float("nan"))
+    colls = {}
+    if hlo_path.exists():
+        with gzip.open(hlo_path, "rt") as f:
+            colls = parse_collectives(f.read())
+        coll_bytes = colls.get("total", float("nan"))
+    t_coll = coll_bytes / ICI_BW if coll_bytes == coll_bytes else float("nan")
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    valid = {k: v for k, v in terms.items() if v == v}
+    dominant = max(valid, key=valid.get) if valid else "?"
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "variant": cfg.name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_6nd": fl["model_flops_6nd"],
+        "analytic_flops": fl["total"],
+        "useful_ratio": fl["model_flops_6nd"] / fl["total"],
+        "hlo_flops_raw": hlo_flops,
+        "hlo_temp_bytes": hlo_mem,
+        "collective_bytes_per_chip": coll_bytes,
+        "collectives": {k: v for k, v in colls.items()
+                        if k in _COLL and v},
+        "params_total": pc.total,
+    }
+
+
+def table(mesh_tag: str = "16x16", archs=None, shapes=None) -> list[dict]:
+    from repro.configs import ASSIGNED
+    rows = []
+    for a in archs or ASSIGNED:
+        for s in shapes or SHAPES:
+            rec = ART / mesh_tag / f"{a}__{s}.json"
+            if not rec.exists():
+                continue
+            rows.append(roofline_row(a, s, mesh_tag))
+    return rows
+
+
+def fmt_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful FLOPs ratio | coll bytes/chip |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['collective_bytes_per_chip']:.2e} |\n")
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    rows = table(mesh)
+    print(fmt_markdown(rows))
+    out = ART / f"roofline_{mesh}.json"
+    out.write_text(json.dumps(rows, indent=1, default=str))
+    print(f"# {len(rows)} rows -> {out}")

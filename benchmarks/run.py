@@ -1,0 +1,97 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+``python -m benchmarks.run``            quick pass (CI-sized, ~10–20 min)
+``python -m benchmarks.run --full``     paper-scale settings
+``python -m benchmarks.run --only table3_comm,fig5_privacy``
+
+Output: CSV blocks per benchmark (``name,us_per_call,derived`` convention
+for the kernel benches; labelled CSV for the accuracy/comm tables).
+The roofline table additionally requires the dry-run artifacts
+(``python -m repro.launch.dryrun --all [--multi-pod]``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def _roofline(quick: bool):
+    import roofline
+    for mesh in ("16x16", "2x16x16"):
+        rows = roofline.table(mesh)
+        if rows:
+            print(f"# roofline {mesh} ({len(rows)} combos)")
+            print(roofline.fmt_markdown(rows))
+        else:
+            print(f"# roofline {mesh}: no dry-run artifacts — run "
+                  "`python -m repro.launch.dryrun --all` first")
+
+
+BENCHES = {}
+
+
+def _register():
+    import beyond_selfweight
+    import fed_comm
+    import fig5_privacy
+    import fig6_alpha
+    import fig8_clients
+    import fig9_convergence
+    import fig10_rank
+    import kernels_bench
+    import table2_accuracy
+    import table3_comm
+    import table45_ablation
+    import table6_overhead
+    BENCHES.update({
+        "table3_comm": table3_comm.main,          # Table III
+        "kernels": kernels_bench.main,            # kernel layer
+        "table6_overhead": table6_overhead.main,  # Table VI
+        "fig5_privacy": fig5_privacy.main,        # Fig 5
+        "table2_accuracy": table2_accuracy.main,  # Table II + Fig 4
+        "table45_ablation": table45_ablation.main,  # Tables IV/V
+        "fig9_convergence": fig9_convergence.main,  # Fig 9
+        "fig6_alpha": fig6_alpha.main,            # Figs 6+7
+        "fig8_clients": fig8_clients.main,        # Fig 8
+        "fig10_rank": fig10_rank.main,            # Fig 10
+        "beyond_selfweight": beyond_selfweight.main,  # beyond-paper λ
+        "fed_comm": fed_comm.main,                # cross-pod bytes (ours)
+        "roofline": _roofline,                    # §Roofline (ours)
+    })
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    _register()
+    quick = not args.full
+    names = args.only.split(",") if args.only else list(BENCHES)
+    failures = []
+    for name in names:
+        print(f"\n===== {name} {'(quick)' if quick else '(full)'} =====",
+              flush=True)
+        t0 = time.time()
+        try:
+            BENCHES[name](quick)
+            print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print(f"\nall {len(names)} benchmarks completed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

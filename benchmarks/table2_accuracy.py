@@ -1,0 +1,41 @@
+"""Paper Table II + Fig. 4 — accuracy of CE-LoRA vs the six baselines under
+non-IID (Dir α=0.5, 10 clients), with best/worst-client spread.
+
+CPU-scale surrogate: small pre-trained backbone + synthetic class-conditional
+token data (DESIGN.md §7).  The claim validated is the ORDERING:
+CE-LoRA ≥ FDLoRA/pFedMe ≥ FedPETuning/FFA ≥ LoRA-local, with the largest
+margin on the worst-performing client, at 2–3 orders less communication.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+METHODS = ["lora_loc", "fedpetuning", "ffa_lora", "pfedme_lora",
+           "pfedme_ffa", "fdlora", "celora"]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 15 if quick else 30
+    print("# Table II / Fig 4 — accuracy under Dir(0.5), 10 clients")
+    print("method,mean_acc,min_acc(worst client),max_acc(best client),"
+          "uplink_floats_per_round,wall_s")
+    out = {}
+    for m in METHODS:
+        r = run_method(m, rounds=rounds)
+        out[m] = r
+        print(f"{m},{r['mean_acc']:.3f},{r['min_acc']:.3f},"
+              f"{r['max_acc']:.3f},{r['uplink_floats_per_round']},"
+              f"{r['wall_s']:.0f}")
+    best_base = max(v["mean_acc"] for k, v in out.items() if k != "celora")
+    print(f"# celora {out['celora']['mean_acc']:.3f} vs best baseline "
+          f"{best_base:.3f}  (comm {out['celora']['uplink_floats_per_round']}"
+          f" vs {out['fedpetuning']['uplink_floats_per_round']})")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

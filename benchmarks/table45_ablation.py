@@ -1,0 +1,35 @@
+"""Paper Tables IV/V — ablation: vanilla-LoRA+FedAvg vs Tri-LoRA+FedAvg vs
+Tri-LoRA+S_data vs Tri-LoRA+S_data+S_model (full CE-LoRA)."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+ROWS = [
+    ("LoRA + FedAvg", "fedpetuning", {}),
+    ("Tri-LoRA + FedAvg", "celora_fedavg", {}),
+    ("Tri-LoRA + S_data", "celora",
+     {"use_data_sim": True, "use_model_sim": False}),
+    ("Tri-LoRA + S_data + S_model", "celora",
+     {"use_data_sim": True, "use_model_sim": True}),
+]
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 15 if quick else 30
+    print("# Tables IV/V — ablation (Dir 0.5, 10 clients)")
+    print("row,method,mean_acc,min_acc,uplink_floats")
+    out = {}
+    for label, method, kw in ROWS:
+        r = run_method(method, rounds=rounds, **kw)
+        out[label] = r
+        print(f"{label},{method},{r['mean_acc']:.3f},{r['min_acc']:.3f},"
+              f"{r['uplink_floats_per_round']}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

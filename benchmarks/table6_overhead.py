@@ -1,0 +1,60 @@
+"""Paper Table VI — computational overhead of the personalized aggregation:
+pairwise CKA over 100 clients' C matrices, O(m²) pairs, at several levels of
+parallelism (vmap batch width stands in for the paper's CPU count)."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.similarity import cka  # noqa: E402
+
+
+def timed_pairwise(m: int, n_modules: int, r: int, chunk: int) -> float:
+    """Pairwise CKA over an (m, M, r, r) stack, processed `chunk` rows of the
+    m×m pair matrix at a time (chunk == m → fully parallel)."""
+    rng = np.random.default_rng(0)
+    cs = jnp.asarray(rng.standard_normal((m, n_modules, r, r)), jnp.float32)
+    probes = jnp.asarray(rng.standard_normal((32, r)), jnp.float32)
+
+    @jax.jit
+    def rows(ci_block):   # (chunk, M, r, r) vs all m
+        def pair(ci_mods, cj_mods):
+            return jnp.mean(jax.vmap(
+                lambda a, b: cka.cka(a, b, probes))(ci_mods, cj_mods))
+        return jax.vmap(
+            lambda ci: jax.vmap(lambda cj: pair(ci, cj))(cs))(ci_block)
+
+    # warmup
+    rows(cs[:chunk]).block_until_ready()
+    t0 = time.perf_counter()
+    outs = []
+    for s in range(0, m, chunk):
+        outs.append(rows(cs[s:s + chunk]))
+    jax.block_until_ready(outs)
+    return time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> dict:
+    m = 32 if quick else 100
+    out = {}
+    print(f"# Table VI — pairwise similarity wall-time, m={m} clients "
+          "(chunk width ~ paper's CPU count)")
+    print("parallel_chunk,seconds")
+    for chunk in ([1, m] if quick else [1, 5, 10, 20, m]):
+        if m % chunk:
+            continue
+        t = timed_pairwise(m, n_modules=8, r=8, chunk=chunk)
+        out[chunk] = t
+        print(f"{chunk},{t:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,27 @@
+"""End-to-end driver: federated CE-LoRA fine-tuning of the ~100M `fed-100m`
+decoder for a few hundred total steps on synthetic LM data (4 clients ×
+10 rounds × 20 local steps = 800 client-steps), with the personalized
+C-aggregation between rounds and a checkpoint at the end.
+
+Run:  PYTHONPATH=src python examples/federated_finetune.py [--fast]
+"""
+import sys
+
+from repro.launch.train import run
+
+fast = "--fast" in sys.argv
+out = run(arch="fed-100m",
+          clients=2 if fast else 4,
+          rounds=3 if fast else 10,
+          local_steps=5 if fast else 20,
+          batch=4 if fast else 8,
+          seq=128 if fast else 256,
+          method="celora",
+          ckpt="/tmp/celora_fed100m.npz",
+          reduced=fast)
+
+first = out["history"][0]["loss"]
+last = out["history"][-1]["loss"]
+print(f"\nfederated fine-tune: loss {first:.3f} -> {last:.3f}")
+assert last < first, "training did not reduce loss"
+print("OK")

@@ -1,0 +1,17 @@
+"""Gradient-inversion (DLG) demo — paper Fig. 5.
+
+Attacks each federated method's per-round payload gradients and prints how
+much of the private batch's token content each one leaks.
+
+Run:  PYTHONPATH=src python examples/privacy_attack.py
+"""
+from repro.core.privacy import run_dlg_experiment
+
+res = run_dlg_experiment(seed=0, n_steps=300)
+print("method        precision  recall  F1    (lower = better privacy)")
+for m, v in res.items():
+    print(f"{m:12s}  {v['precision']:.3f}      {v['recall']:.3f}   "
+          f"{v['f1']:.3f}")
+assert res["celora"]["f1"] <= res["fedpetuning"]["f1"] + 0.05, \
+    "CE-LoRA should leak no more than FedPETuning"
+print("OK — transmitting only C resists reconstruction best")

@@ -1,0 +1,4 @@
+"""repro — production-grade JAX reproduction of CE-LoRA (tri-matrix federated
+LoRA fine-tuning with personalized aggregation), plus the multi-arch,
+multi-pod training/serving substrate around it."""
+__version__ = "0.1.0"

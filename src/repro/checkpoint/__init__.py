@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import metadata, restore, save  # noqa: F401

@@ -1,0 +1,77 @@
+"""Checkpointing: pytree ⇄ .npz with slash-joined key paths.
+
+No orbax offline; this is deliberately simple but complete: saves/restores
+arbitrary nested dict/tuple/list pytrees of jnp arrays with dtype and
+structure preserved, plus atomic write (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    arrays, _ = _flatten(tree)
+    # bf16 has no numpy savez support pre-2.x in some paths; view as uint16
+    packed = {}
+    dtypes = {}
+    for k, v in arrays.items():
+        if v.dtype == jnp.bfloat16:
+            packed[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            packed[k] = v
+            dtypes[k] = str(v.dtype)
+    packed["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), np.uint8)
+    if metadata:
+        packed["__meta__"] = np.frombuffer(
+            json.dumps(metadata).encode(), np.uint8)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **packed)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        dtypes = json.loads(bytes(data["__dtypes__"]).decode())
+        flat_like, treedef = jax.tree.flatten_with_path(like)
+        leaves = []
+        for pth, leaf in flat_like:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in pth)
+            arr = data[key]
+            if dtypes[key] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            want = jnp.asarray(leaf)
+            assert arr.shape == want.shape, (key, arr.shape, want.shape)
+            leaves.append(jnp.asarray(arr, want.dtype))
+        return jax.tree.unflatten(treedef, [l for _, l in
+                                            zip(flat_like, leaves)])
+
+
+def metadata(path: str) -> dict:
+    with np.load(path) as data:
+        if "__meta__" in data:
+            return json.loads(bytes(data["__meta__"]).decode())
+    return {}

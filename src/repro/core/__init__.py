@@ -1,0 +1,2 @@
+"""CE-LoRA core — the paper's contribution as composable JAX modules."""
+from repro.core import tri_lora  # noqa: F401

@@ -1,0 +1,100 @@
+"""Server-side model parameter aggregation (paper §III-C).
+
+``personalized_weights`` implements eqn (3): per-client aggregation weights
+from the combined affinity S = S^data + S^model, self excluded.  A
+``self_weight`` λ extends the paper (beyond-paper knob, default 0 = faithful):
+C̄_i = λ·C_i + (1-λ)·Σ_{j≠i} w_ij C_j.
+
+``aggregate_payloads`` applies the weights to any pytree-of-C payloads;
+``fedavg`` is the FedPETuning baseline (sample-count weighted mean).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def personalized_weights(similarity: jnp.ndarray,
+                         self_weight: float = 0.0) -> jnp.ndarray:
+    """similarity: (m, m), symmetric, higher = more similar.
+    Returns row-stochastic W (m, m): W[i] are client i's aggregation weights.
+    """
+    m = similarity.shape[0]
+    eye = jnp.eye(m, dtype=bool)
+    s = jnp.where(eye, 0.0, similarity)
+    s = jnp.maximum(s, 0.0)
+    denom = jnp.maximum(jnp.sum(s, axis=1, keepdims=True), 1e-12)
+    w = s / denom                                   # eqn (3), j ≠ i
+    if self_weight:
+        w = (1.0 - self_weight) * w + self_weight * jnp.eye(m)
+    return w
+
+
+def aggregate_payloads(payloads: Sequence[Any], weights: jnp.ndarray) -> list:
+    """payloads: list (len m) of identical-structure pytrees (the C trees).
+    Returns list of per-client aggregated pytrees: out_i = Σ_j W[i,j]·p_j."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)   # (m, …)
+    def agg(leaf):
+        return jnp.einsum("ij,j...->i...", weights.astype(leaf.dtype), leaf)
+    mixed = jax.tree.map(agg, stacked)
+    m = weights.shape[0]
+    return [jax.tree.map(lambda l, i=i: l[i], mixed) for i in range(m)]
+
+
+def fedavg(payloads: Sequence[Any], sample_counts: Sequence[int]) -> Any:
+    """FedPETuning-style sample-weighted average; returns ONE global pytree."""
+    n = jnp.asarray(sample_counts, jnp.float32)
+    w = n / jnp.sum(n)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    return jax.tree.map(
+        lambda l: jnp.einsum("j,j...->...", w.astype(l.dtype), l), stacked)
+
+
+def hierarchical_weights(similarity: jnp.ndarray, edge_of: jnp.ndarray,
+                         intra_frac: float = 0.7,
+                         self_weight: float = 0.0) -> jnp.ndarray:
+    """Client–edge–cloud aggregation (paper §IV-I's scalability suggestion,
+    implemented): client i mixes `intra_frac` of its personalized weights
+    from its own edge group and the rest from other edges' clients (the
+    cloud tier), each tier renormalized from the same affinity matrix.
+
+    With E edges of m/E clients, the server-side pairwise work drops from
+    O(m²) dense mixing to per-edge blocks + an edge-level exchange, and the
+    uplink beyond each edge is one aggregated C per edge instead of one per
+    client.  Returns a row-stochastic (m, m) weight matrix (so it drops into
+    :func:`aggregate_payloads` unchanged).
+    """
+    m = similarity.shape[0]
+    eye = jnp.eye(m, dtype=bool)
+    s = jnp.maximum(jnp.where(eye, 0.0, similarity), 0.0)
+    same = edge_of[:, None] == edge_of[None, :]
+    s_in = jnp.where(same, s, 0.0)
+    s_out = jnp.where(~same, s, 0.0)
+
+    def _norm(mat):
+        d = jnp.sum(mat, axis=1, keepdims=True)
+        return jnp.where(d > 1e-12, mat / jnp.maximum(d, 1e-12), 0.0)
+
+    w_in = _norm(s_in)
+    w_out = _norm(s_out)
+    # degrade gracefully: a client alone in its edge uses the cloud tier only
+    has_in = (jnp.sum(s_in, axis=1, keepdims=True) > 1e-12)
+    has_out = (jnp.sum(s_out, axis=1, keepdims=True) > 1e-12)
+    fi = jnp.where(has_in, intra_frac, 0.0)
+    fo = jnp.where(has_out, 1.0 - fi, 0.0)
+    # renormalize the pair (fi, fo) to sum to 1 where possible
+    tot = jnp.maximum(fi + fo, 1e-12)
+    w = (fi / tot) * w_in + (fo / tot) * w_out
+    if self_weight:
+        w = (1.0 - self_weight) * w + self_weight * jnp.eye(m)
+    return w
+
+
+def combined_similarity(s_data: jnp.ndarray, s_model: jnp.ndarray,
+                        data_weight: float = 1.0,
+                        model_weight: float = 1.0) -> jnp.ndarray:
+    """Paper eqn (4): S = S^data + S^model (weights are a beyond-paper knob,
+    both 1.0 = faithful)."""
+    return data_weight * s_data + model_weight * s_model

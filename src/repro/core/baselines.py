@@ -1,0 +1,190 @@
+"""Federated fine-tuning strategies: CE-LoRA + the paper's six baselines.
+
+Each strategy is a small object describing
+- which adapter factors are trainable (grad mask),
+- what goes up the wire (uplink payload),
+- how the server aggregates (fedavg / personalized / none),
+- what comes back down and how it is installed,
+- any extra local objective term (pFedMe's Moreau-envelope prox).
+
+All strategies share the same client state layout
+``{'adapter': tri-LoRA tree, 'head': (D,K)}`` (plus method extras), so the
+runner in :mod:`repro.core.federated` is strategy-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, tri_lora
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers over adapter trees
+# ---------------------------------------------------------------------------
+
+def _select(adapter_tree: Any, keys: tuple[str, ...]) -> Any:
+    """Sub-tree with only the chosen factors of each adapter."""
+    return jax.tree.map(lambda a: {k: a[k] for k in keys}, adapter_tree,
+                        is_leaf=tri_lora.is_adapter)
+
+
+def _install(adapter_tree: Any, sub: Any, keys: tuple[str, ...]) -> Any:
+    leaves, treedef = jax.tree.flatten(adapter_tree,
+                                       is_leaf=tri_lora.is_adapter)
+    sub_leaves = jax.tree.flatten(
+        sub, is_leaf=lambda n: isinstance(n, dict) and set(n) == set(keys))[0]
+    out = [dict(a, **{k: s[k].astype(a[k].dtype) for k in keys})
+           for a, s in zip(leaves, sub_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def adapter_grad_mask(adapter_tree: Any, train_keys: tuple[str, ...]) -> Any:
+    def mask(a):
+        return {k: jnp.ones_like(v) if k in train_keys else jnp.zeros_like(v)
+                for k, v in a.items()}
+    return jax.tree.map(mask, adapter_tree, is_leaf=tri_lora.is_adapter)
+
+
+def count_floats(tree: Any) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# strategy definition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Strategy:
+    name: str
+    train_keys: tuple[str, ...]              # trainable tri-LoRA factors
+    uplink_keys: tuple[str, ...]             # factors sent to the server
+    aggregate: str                           # 'none' | 'fedavg' | 'personalized'
+    dual: bool = False                       # FDLoRA: extra global adapter
+    prox: float = 0.0                        # pFedMe λ (0 = off)
+
+    # ----------------------------------------------------------- client side
+    def init_state(self, client: dict) -> dict:
+        state = dict(client)
+        if self.dual:
+            # FDLoRA: second (global) adapter, same structure, fresh zeros-B
+            state["global_adapter"] = jax.tree.map(
+                lambda a: {"A": a["A"] * 0.7, "C": a["C"],
+                           "B": jnp.zeros_like(a["B"])},
+                client["adapter"], is_leaf=tri_lora.is_adapter)
+        if self.prox:
+            state["w"] = _select(client["adapter"], self.uplink_keys)
+        return state
+
+    def trainable(self, state: dict) -> dict:
+        t = {"adapter": state["adapter"], "head": state["head"]}
+        if self.dual:
+            t["global_adapter"] = state["global_adapter"]
+        return t
+
+    def grad_mask(self, trainable: dict) -> dict:
+        m = {"adapter": adapter_grad_mask(trainable["adapter"],
+                                          self.train_keys),
+             "head": jnp.ones_like(trainable["head"])}
+        if self.dual:
+            m["global_adapter"] = adapter_grad_mask(
+                trainable["global_adapter"], ("A", "B"))
+        return m
+
+    def effective_adapter(self, trainable: dict) -> Any:
+        if self.dual:
+            return tri_lora.tree_combine(trainable["global_adapter"],
+                                         trainable["adapter"])
+        return trainable["adapter"]
+
+    def local_penalty(self, trainable: dict, state: dict) -> jnp.ndarray:
+        if not self.prox:
+            return jnp.zeros((), jnp.float32)
+        theta = _select(trainable["adapter"], self.uplink_keys)
+        diff = jax.tree.map(lambda a, b: jnp.sum(jnp.square(
+            a.astype(jnp.float32) - b.astype(jnp.float32))), theta, state["w"])
+        return 0.5 * self.prox * sum(jax.tree.leaves(diff))
+
+    def after_local(self, state: dict, eta: float = 0.5) -> dict:
+        """pFedMe outer update: move the local copy of the global point
+        toward the personalized optimum θ."""
+        if not self.prox:
+            return state
+        theta = _select(state["adapter"], self.uplink_keys)
+        w = jax.tree.map(lambda wv, tv: wv - eta * (wv - tv),
+                         state["w"], theta)
+        return dict(state, w=w)
+
+    # ------------------------------------------------------------- transport
+    def uplink(self, state: dict) -> Optional[Any]:
+        if self.aggregate == "none":
+            return None
+        src = state["global_adapter"] if self.dual else (
+            state["w"] if self.prox else state["adapter"])
+        if self.prox:
+            return src  # already the selected sub-tree
+        return _select(src, self.uplink_keys)
+
+    def server(self, payloads: list, *, sample_counts, weights=None) -> list:
+        """Returns per-client downlinks."""
+        if self.aggregate == "none":
+            return [None] * len(payloads)
+        if self.aggregate == "fedavg":
+            g = aggregation.fedavg(payloads, sample_counts)
+            return [g] * len(payloads)
+        assert weights is not None, "personalized aggregation needs weights"
+        return aggregation.aggregate_payloads(payloads, weights)
+
+    def install(self, state: dict, downlink: Any) -> dict:
+        if downlink is None:
+            return state
+        state = dict(state)
+        if self.dual:
+            state["global_adapter"] = _install(state["global_adapter"],
+                                               downlink, self.uplink_keys)
+        elif self.prox:
+            state["w"] = downlink
+            # personalized θ keeps its value (pFedMe); only w is replaced
+        else:
+            state["adapter"] = _install(state["adapter"], downlink,
+                                        self.uplink_keys)
+        return state
+
+    def uplink_floats(self, state: dict) -> int:
+        p = self.uplink(state)
+        return 0 if p is None else count_floats(p)
+
+
+# ---------------------------------------------------------------------------
+# registry — the paper's §IV-A baseline list
+# ---------------------------------------------------------------------------
+
+STRATEGIES: dict[str, Strategy] = {
+    # (1) LoRA with local data only — vanilla LoRA (C pinned at identity)
+    "lora_loc": Strategy("lora_loc", ("A", "B"), (), "none"),
+    # (2) FedPETuning — FedAvg over the full (A, B)
+    "fedpetuning": Strategy("fedpetuning", ("A", "B"), ("A", "B"), "fedavg"),
+    # (3) FFA-LoRA — freeze A, transmit/average B only
+    "ffa_lora": Strategy("ffa_lora", ("B",), ("B",), "fedavg"),
+    # (4) FDLoRA — dual LoRA: fedavg'd global module + local module
+    "fdlora": Strategy("fdlora", ("A", "B"), ("A", "B"), "fedavg", dual=True),
+    # (5) pFedMe with full LoRA aggregation
+    "pfedme_lora": Strategy("pfedme_lora", ("A", "B"), ("A", "B"), "fedavg",
+                            prox=1.0),
+    # (6) pFedMe with FFA-LoRA's communication (B only)
+    "pfedme_ffa": Strategy("pfedme_ffa", ("B",), ("B",), "fedavg", prox=1.0),
+    # OURS: tri-factor, transmit C only, personalized aggregation
+    "celora": Strategy("celora", ("A", "B", "C"), ("C",), "personalized"),
+    # ablation: tri-factor + plain FedAvg (paper Tables IV/V row 2)
+    "celora_fedavg": Strategy("celora_fedavg", ("A", "B", "C"), ("C",),
+                              "fedavg"),
+}
+
+
+def get_strategy(name: str) -> Strategy:
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(STRATEGIES)}")
+    return STRATEGIES[name]

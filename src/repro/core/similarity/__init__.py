@@ -1,0 +1,1 @@
+from repro.core.similarity import cka, gmm, ot  # noqa: F401

@@ -1,0 +1,84 @@
+"""Model similarity via linear Centered Kernel Alignment (paper §III-C.2).
+
+Per paper eqns (7)–(9): a shared random probe batch Z (n × r) is pushed
+through each client's transmitted core matrix C_i; the linear kernels
+K_i = (Z C_i)(Z C_i)ᵀ are compared with the HSIC ratio
+
+    CKA(C_i, C_j) = HSIC(K_i, K_j) / sqrt(HSIC(K_i,K_i)·HSIC(K_j,K_j)).
+
+CKA ∈ [0, 1]; 1 = identical representation geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _center(k: jnp.ndarray) -> jnp.ndarray:
+    n = k.shape[0]
+    h = jnp.eye(n) - jnp.full((n, n), 1.0 / n)
+    return h @ k @ h
+
+
+def hsic(k: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    """tr(K H L H) — paper eqn (9) (unnormalized HSIC)."""
+    return jnp.trace(_center(k) @ _center(l))
+
+
+def linear_kernel_of_c(c: jnp.ndarray, probes: jnp.ndarray) -> jnp.ndarray:
+    """K = (Z C)(Z C)ᵀ for probe batch Z (n, r)."""
+    y = probes.astype(jnp.float32) @ c.astype(jnp.float32)
+    return y @ y.T
+
+
+def cka(c_i: jnp.ndarray, c_j: jnp.ndarray, probes: jnp.ndarray) -> jnp.ndarray:
+    k_i = linear_kernel_of_c(c_i, probes)
+    k_j = linear_kernel_of_c(c_j, probes)
+    h_ij = hsic(k_i, k_j)
+    h_ii = hsic(k_i, k_i)
+    h_jj = hsic(k_j, k_j)
+    return h_ij / jnp.maximum(jnp.sqrt(h_ii * h_jj), 1e-12)
+
+
+def pairwise_cka(c_stack: jnp.ndarray, key: jax.Array,
+                 n_probes: int = 64) -> jnp.ndarray:
+    """c_stack: (m, r, r) — one (possibly flattened) C per client.
+    Returns the (m, m) CKA matrix, vmapped over all pairs (Table VI's
+    O(m²) computation, embarrassingly parallel)."""
+    r = c_stack.shape[-1]
+    probes = jax.random.normal(key, (n_probes, r), jnp.float32)
+    f = jax.vmap(lambda ci: jax.vmap(lambda cj: cka(ci, cj, probes))(c_stack))
+    return f(c_stack)
+
+
+def stack_client_cs(c_trees: list) -> jnp.ndarray:
+    """Flatten each client's C-pytree to (n_modules, r, r) — leaves may carry
+    leading layer-stack axes (q, …, r, r) which are folded into the module
+    axis — then stack clients.  Returns (m, n_modules, r, r)."""
+    def flat(t):
+        leaves = [l.reshape(-1, l.shape[-2], l.shape[-1])
+                  for l in jax.tree.leaves(t)]
+        return jnp.concatenate(leaves, axis=0)
+    return jnp.stack([flat(t) for t in c_trees])               # (m, M, r, r)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probes",))
+def _pairwise_cka_stacked(cs: jnp.ndarray, key: jax.Array,
+                          n_probes: int) -> jnp.ndarray:
+    r = cs.shape[-1]
+    probes = jax.random.normal(key, (n_probes, r), jnp.float32)
+
+    def pair(ci_mods, cj_mods):
+        vals = jax.vmap(lambda a, b: cka(a, b, probes))(ci_mods, cj_mods)
+        return jnp.mean(vals)
+
+    return jax.vmap(lambda ci: jax.vmap(lambda cj: pair(ci, cj))(cs))(cs)
+
+
+def pairwise_model_similarity(c_trees: list, key: jax.Array,
+                              n_probes: int = 64) -> jnp.ndarray:
+    """S^model (m, m): mean over adapted modules of per-module CKA."""
+    cs = stack_client_cs(c_trees)                              # (m,M,r,r)
+    return _pairwise_cka_stacked(cs, key, n_probes)

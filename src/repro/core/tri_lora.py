@@ -1,0 +1,128 @@
+"""Tri-matrix LoRA factorization — the paper's §III-B contribution.
+
+Vanilla LoRA:      h = x·W + x·A·B            (A: d×r, B: r×k)
+CE-LoRA (tri):     h = x·W + x·A·C·B          (C: r×r, full-rank core)
+
+Only ``C`` is transmitted between clients and server during federated
+fine-tuning; ``A`` and ``B`` remain local.  Per adapted matrix the per-round
+payload drops from ``r(d+k)`` to ``r²`` floats.
+
+Initialization: ``A ~ N(0, 1/r)``, ``B = 0``, ``C = I_r`` — so the adapter
+starts at ΔW = 0 and, at C = I, tri-LoRA coincides with vanilla LoRA
+(``A·I·B = A·B``), which makes the factorization a strict generalization.
+
+This module is runtime-agnostic: plain pytrees + jnp.  The federated
+plumbing lives in :mod:`repro.core.federated`; the fused TPU kernel in
+:mod:`repro.kernels.tri_lora`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Adapter = Dict[str, jnp.ndarray]  # {'A': (d,r), 'C': (r,r), 'B': (r,k)}
+
+
+def init_adapter(key: jax.Array, d_in: int, d_out: int, rank: int,
+                 dtype=jnp.float32) -> Adapter:
+    """One tri-LoRA adapter for a (d_in, d_out) projection."""
+    a_key, _ = jax.random.split(key)
+    return {
+        "A": (jax.random.normal(a_key, (d_in, rank), jnp.float32)
+              / jnp.sqrt(rank)).astype(dtype),
+        "C": jnp.eye(rank, dtype=dtype),
+        "B": jnp.zeros((rank, d_out), dtype),
+    }
+
+
+def adapter_delta(adapter: Adapter, scaling: float) -> jnp.ndarray:
+    """Materialize ΔW = scaling · A·C·B (used for merge at inference)."""
+    acb = adapter["A"] @ adapter["C"] @ adapter["B"]
+    return (scaling * acb.astype(jnp.float32)).astype(adapter["A"].dtype)
+
+
+def apply_tri_lora(x: jnp.ndarray, adapter: Adapter, scaling: float) -> jnp.ndarray:
+    """Low-rank path: scaling · ((x·A)·C)·B — O(r·(d+k)) per token.
+
+    Ordered left-to-right so the intermediate is always (..., r).
+    """
+    p = x @ adapter["A"]           # (..., r)
+    p = p @ adapter["C"]           # (..., r)  — the r×r core
+    return scaling * (p @ adapter["B"])
+
+
+def merge(w: jnp.ndarray, adapter: Adapter, scaling: float) -> jnp.ndarray:
+    """Inference-time merge (paper eqn. 10): W_i = W + A_i·C_i·B_i."""
+    return (w.astype(jnp.float32)
+            + adapter_delta(adapter, scaling).astype(jnp.float32)).astype(w.dtype)
+
+
+def comm_payload(adapter: Adapter) -> jnp.ndarray:
+    """What CE-LoRA sends over the wire each round: C only."""
+    return adapter["C"]
+
+
+def load_payload(adapter: Adapter, c_bar: jnp.ndarray) -> Adapter:
+    """Install the server's personalized aggregate C̄_i (paper §III-D)."""
+    return {**adapter, "C": c_bar.astype(adapter["C"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level helpers: an "adapter tree" is any pytree whose leaves are
+# adapter dicts (recognized by their {'A','B','C'} keys).
+# ---------------------------------------------------------------------------
+
+def is_adapter(node: Any) -> bool:
+    return isinstance(node, dict) and set(node.keys()) == {"A", "B", "C"}
+
+
+def tree_payload(adapter_tree: Any) -> Any:
+    """Extract the C-matrix pytree (the full federated payload)."""
+    return jax.tree.map(comm_payload, adapter_tree, is_leaf=is_adapter)
+
+
+def tree_load_payload(adapter_tree: Any, c_tree: Any) -> Any:
+    flat_c, _ = jax.tree.flatten(c_tree)
+    leaves, treedef = jax.tree.flatten(adapter_tree, is_leaf=is_adapter)
+    assert len(flat_c) == len(leaves), (len(flat_c), len(leaves))
+    new = [load_payload(a, c) for a, c in zip(leaves, flat_c)]
+    return jax.tree.unflatten(treedef, new)
+
+
+def payload_num_params(adapter_tree: Any) -> int:
+    """Floats transmitted per round by CE-LoRA (Σ r² over adapted modules)."""
+    return sum(int(c.size) for c in jax.tree.leaves(tree_payload(adapter_tree)))
+
+
+def combine_adapters(a1: Adapter, a2: Adapter) -> Adapter:
+    """Express the SUM of two tri-LoRA adapters as one rank-(r1+r2) adapter:
+    A = [A1 A2], C = blockdiag(C1, C2), B = [B1; B2].  Used by the FDLoRA
+    baseline (dual global+local LoRA modules) so the model forward stays
+    single-adapter."""
+    r1 = a1["C"].shape[-1]
+    r2 = a2["C"].shape[-1]
+    lead = a1["C"].shape[:-2]
+    z12 = jnp.zeros(lead + (r1, r2), a1["C"].dtype)
+    z21 = jnp.zeros(lead + (r2, r1), a1["C"].dtype)
+    top = jnp.concatenate([a1["C"], z12], axis=-1)
+    bot = jnp.concatenate([z21, a2["C"]], axis=-1)
+    return {
+        "A": jnp.concatenate([a1["A"], a2["A"]], axis=-1),
+        "C": jnp.concatenate([top, bot], axis=-2),
+        "B": jnp.concatenate([a1["B"], a2["B"]], axis=-2),
+    }
+
+
+def tree_combine(t1: Any, t2: Any) -> Any:
+    leaves1, treedef = jax.tree.flatten(t1, is_leaf=is_adapter)
+    leaves2, _ = jax.tree.flatten(t2, is_leaf=is_adapter)
+    return jax.tree.unflatten(
+        treedef, [combine_adapters(a, b) for a, b in zip(leaves1, leaves2)])
+
+
+def full_lora_num_params(adapter_tree: Any) -> int:
+    """Floats FedPETuning would transmit (A and B)."""
+    leaves = jax.tree.leaves(adapter_tree, is_leaf=is_adapter)
+    return sum(int(a["A"].size + a["B"].size) for a in leaves)

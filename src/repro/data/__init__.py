@@ -1,0 +1,1 @@
+from repro.data import partition, pipeline, synthetic  # noqa: F401

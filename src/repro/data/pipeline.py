@@ -1,0 +1,51 @@
+"""Minibatch pipeline over in-memory arrays (per-client federated loaders)."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+class Loader:
+    """Shuffling minibatch iterator; yields dicts of numpy arrays."""
+
+    def __init__(self, arrays: dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0, drop_last: bool = False):
+        sizes = {k: len(v) for k, v in arrays.items()}
+        assert len(set(sizes.values())) == 1, sizes
+        self.arrays = arrays
+        self.n = next(iter(sizes.values()))
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.drop_last = drop_last
+
+    def __len__(self) -> int:
+        if self.drop_last:
+            return self.n // self.batch_size
+        return -(-self.n // self.batch_size)
+
+    def epoch(self) -> Iterator[dict]:
+        order = self.rng.permutation(self.n)
+        stop = (self.n // self.batch_size * self.batch_size
+                if self.drop_last else self.n)
+        for s in range(0, stop, self.batch_size):
+            idx = order[s:s + self.batch_size]
+            if idx.size == 0:
+                return
+            yield {k: v[idx] for k, v in self.arrays.items()}
+
+    def batches(self, n_batches: int) -> Iterator[dict]:
+        """Exactly n_batches, cycling epochs (resamples if client is small)."""
+        done = 0
+        while done < n_batches:
+            for b in self.epoch():
+                if b[next(iter(b))].shape[0] < self.batch_size:
+                    # pad small final batches by resampling
+                    need = self.batch_size - b[next(iter(b))].shape[0]
+                    extra = self.rng.integers(0, self.n, need)
+                    b = {k: np.concatenate([v, self.arrays[k][extra]])
+                         for k, v in b.items()}
+                yield b
+                done += 1
+                if done >= n_batches:
+                    return

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True):
+
+- tri_lora:        fused base-matmul + rank-r tri-LoRA epilogue
+- flash_attention: blockwise online-softmax attention, GQA + sliding window
+- rwkv6:           chunked WKV6 data-dependent-decay recurrence
+"""

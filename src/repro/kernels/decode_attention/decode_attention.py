@@ -1,0 +1,90 @@
+"""Flash-decoding kernel: one query token vs a (ring) KV cache.
+
+The decode_32k roofline rows are memory-bound on cache reads; this kernel
+streams the cache through VMEM once with online softmax, GQA-indexing the
+KV head per query head via BlockSpec (no repeated KV in HBM), and masks
+ring-buffer slots beyond the newest written position.
+
+Grid: (B, H, R/bk) — KV innermost/sequential; scratch carries (m, l, acc).
+VMEM per step ≈ 2·bk·hd (K,V tiles) + hd (q) + bk (logits) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk: int, n_kv: int, ring: int, sm_scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[0]
+    k_first = ki * bk
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # (hd,)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * sm_scale  # (bk,)
+    slot = k_first + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    valid = (slot <= idx) | (idx >= ring)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[0] = alpha * l_ref[0] + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, 0, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, idx, *, bk: int = 512,
+                            interpret: bool = False):
+    """q (B,H,1,hd); k/v_cache (B,K,R,hd); idx () int32.  → (B,H,1,hd)."""
+    b, h, _, hd = q.shape
+    kh, ring = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    bk = min(bk, ring)
+    assert ring % bk == 0, (ring, bk)
+    n_kv = ring // bk
+    grid = (b, h, n_kv)
+    sm_scale = float(hd) ** -0.5
+    idx_arr = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (1,))
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n_kv=n_kv, ring=ring,
+                          sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ki: (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda bb, hh, ki: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda bb, hh, ki: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx_arr, q, k_cache, v_cache)

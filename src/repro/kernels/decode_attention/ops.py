@@ -1,0 +1,33 @@
+"""Jit'd wrapper: model layout (B,1,H,hd) / cache (B,R,K,hd) ⇄ kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_kernel,
+)
+
+_INTERPRET_DEFAULT = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k_cache, v_cache, idx, *, bk: int = 512,
+                     interpret: bool | None = None):
+    """q (B,1,H,hd); k/v_cache (B,R,K,hd); idx () int32 → (B,1,H,hd)."""
+    if interpret is None:
+        interpret = _INTERPRET_DEFAULT
+    ring = k_cache.shape[1]
+    bk_eff = min(bk, ring)
+    pad = (-ring) % bk_eff
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    if pad:  # padded slots have slot-index > ring, masked by `slot <= idx`
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qt = jnp.swapaxes(q, 1, 2)
+    out = decode_attention_kernel(qt, kt, vt, idx, bk=bk_eff,
+                                  interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for single-token decode attention over a ring cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa
+
+
+def decode_attention_ref(q, k_cache, v_cache, idx, *, ring_valid=True):
+    """q (B,1,H,hd); k/v_cache (B,R,K,hd); idx: absolute position of the
+    NEWEST token already written into the cache (int32 scalar).
+
+    Valid slots: [0, idx] until the ring wraps, then all (matches
+    attention.decode_self_attention's masking)."""
+    ring = k_cache.shape[1]
+    valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
+    valid = jnp.broadcast_to(valid, (q.shape[0], ring))
+    return sdpa(q, k_cache, v_cache, causal=False, kv_valid=valid)

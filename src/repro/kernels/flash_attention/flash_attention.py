@@ -1,0 +1,116 @@
+"""Blockwise online-softmax attention kernel (FlashAttention on TPU).
+
+Features: causal masking, sliding window (SWA archs + the long_500k
+sliding-window variants), grouped-query attention WITHOUT materializing
+repeated KV — the BlockSpec index map points each query head at its KV
+group (h → h // group_size), so KV tiles are fetched once per group.
+
+Grid: (batch, q_heads, Sq/bq, Skv/bk) — the KV dim is innermost and
+sequential on TPU, so the (m, l, acc) running-softmax state lives in VMEM
+scratch across KV iterations.  Blocks outside the causal/window band are
+skipped entirely via ``pl.when`` predication (this is what makes the SWA
+variant sub-quadratic in compiled FLOPs).
+
+VMEM per step ≈ bq·hd (q) + 2·bk·hd (k,v) + bq·bk (logits) + bq·hd (acc)
+f32 — with bq=bk=512, hd=128: ~2.6 MB, comfortably inside one core's VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sm_scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = qi * bq          # absolute position of this q block's first row
+    k_first = ki * bk
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_first <= q_first + bq - 1           # block not fully future
+    if window:
+        run &= k_first + bk - 1 >= q_first - window + 1   # overlaps window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q (B,H,Sq,hd), k/v (B,K,Skv,hd), H % K == 0.  Returns (B,H,Sq,hd)."""
+    b, h, sq, hd = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    n_kv = skv // bk
+    grid = (b, h, sq // bq, n_kv)
+    sm_scale = float(hd) ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, causal=causal,
+                          window=window, bq=bq, bk=bk, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            # GQA: map query head -> kv head, no repeat materialized
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Jit'd wrapper: layout adaptation (B,S,H,hd) ⇄ (B,H,S,hd) + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+_INTERPRET_DEFAULT = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, bq: int = 512,
+                    bk: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Model-layout entry point: q (B,Sq,H,hd), k/v (B,Skv,K,hd)."""
+    if interpret is None:
+        interpret = _INTERPRET_DEFAULT
+    sq = q.shape[1]
+    bq = min(bq, 1 << (sq - 1).bit_length())
+    bk = min(bk, bq)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    pad_q = (-qt.shape[2]) % bq
+    pad_k = (-kt.shape[2]) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    # NOTE on padded causal rows: padded q rows attend to nothing real but
+    # their outputs are sliced away; padded k cols are masked by causality
+    # only when causal=True — for non-causal use, callers must pad-mask.
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=interpret)
+    if pad_q:
+        out = out[:, :, :sq]
+    return jnp.swapaxes(out, 1, 2)

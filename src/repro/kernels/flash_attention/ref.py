@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for blockwise flash attention (GQA + window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k/v (B,Skv,K,hd) — delegates to the reference SDPA
+    (f32 softmax, grouped-query, optional sliding window)."""
+    return sdpa(q, k, v, causal=causal, window=window)

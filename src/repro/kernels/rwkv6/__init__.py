@@ -1,0 +1,2 @@
+from repro.kernels.rwkv6.ops import wkv6  # noqa: F401
+from repro.kernels.rwkv6.ref import wkv6_ref  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the WKV6 recurrence (naive time scan)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv_scan
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """r,k,v,w: (B,T,H,hd) — w ∈ (0,1); u: (H,hd); state: (B,H,hd,hd) f32.
+    Returns (y (B,T,H,hd) f32, new state)."""
+    return wkv_scan(r, k, v, w, u, state)

@@ -1,0 +1,110 @@
+"""Chunked WKV6 recurrence kernel (RWKV-6 "Finch" data-dependent decay).
+
+TPU adaptation of the CUDA wkv6 kernel (DESIGN.md §3): instead of one
+thread-per-channel serial loop, time is blocked into chunks of L steps and
+each chunk is processed with dense algebra that the VPU/MXU like:
+
+  per head, with lw[t] = Σ_{s≤t} log w_s  (log-space cumulative decay):
+    y_intra[t] = Σ_{s<t} (Σ_i r[t,i]·k[s,i]·e^{lw[t-1,i]−lw[s,i]}) v[s]
+                 + (Σ_i r[t,i]·u[i]·k[t,i]) v[t]
+    y_inter[t] = (r[t] ⊙ e^{lw[t-1]}) @ S
+    S ← diag(e^{lw[L-1]}) S + Σ_s (k[s] ⊙ e^{lw[L-1]−lw[s]}) v[s]ᵀ
+
+  All exponents are differences lw[t]−lw[s] with t ≥ s, hence ≤ 0 — no
+  overflow regardless of how aggressive the learned decay is.
+
+Grid: (B·H, T/L); the chunk axis is innermost/sequential so the (hd, hd)
+f32 state persists in VMEM scratch across chunks; HBM traffic is one read
+of r/k/v/w and one write of y.  L = 32 keeps the (L, L, hd) decay tensor
+~256 KB in VMEM at hd = 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            s_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]                    # (hd, hd) f32
+
+    r = r_ref[0].astype(jnp.float32)              # (L, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)              # decay ∈ (0,1)
+    u = u_ref[0].astype(jnp.float32)              # (hd,)
+    s = s_ref[...]
+
+    lw = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-30)), axis=0)     # (L, hd)
+    lw_prev = jnp.concatenate([jnp.zeros((1, lw.shape[1]), jnp.float32),
+                               lw[:-1]], axis=0)                # lw[t-1]
+
+    # inter-chunk: contribution of carried state
+    y_inter = jnp.dot(r * jnp.exp(lw_prev), s,
+                      preferred_element_type=jnp.float32)       # (L, hd_v)
+
+    # intra-chunk attention-like matrix with per-channel decay
+    # e[t,s,i] = exp(lw[t-1,i] - lw[s,i]), valid for s < t (≤ 0 exponent)
+    expo = lw_prev[:, None, :] - lw[None, :, :]                 # (L, L, hd)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = (s_idx < t_idx)[..., None]
+    e = jnp.where(strict, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    att = jnp.einsum("ti,si,tsi->ts", r, k, e)                  # (L, L)
+    att = att + jnp.diag(jnp.sum(r * u[None, :] * k, axis=1))   # bonus u-term
+    y = y_inter + jnp.dot(att, v, preferred_element_type=jnp.float32)
+
+    # state update to end of chunk
+    decay_all = jnp.exp(lw[-1])                                 # (hd,)
+    k_scaled = k * jnp.exp(lw[-1][None, :] - lw)                # (L, hd) ≤ k
+    s_new = decay_all[:, None] * s + jnp.dot(
+        k_scaled.T, v, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    s_ref[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _done():
+        sout_ref[0] = s_new
+
+
+def wkv6_kernel(r, k, v, w, u, state, *, chunk: int = 32,
+                interpret: bool = False):
+    """r,k,v,w: (BH, T, hd); u: (BH, hd); state: (BH, hd, hd) f32.
+    Returns (y (BH,T,hd) f32, new_state (BH,hd,hd) f32)."""
+    bh, t, hd = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+    grid = (bh, n_chunks)
+    y, s_out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, s_out

@@ -1,0 +1,2 @@
+from repro.kernels.tri_lora.ops import tri_lora_matmul  # noqa: F401
+from repro.kernels.tri_lora.ref import tri_lora_matmul_ref  # noqa: F401

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the fused tri-LoRA projection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tri_lora.tri_lora import tri_lora_matmul_kernel
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scaling", "interpret", "bm", "bn", "bk"))
+def tri_lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                    c: jnp.ndarray, b: jnp.ndarray, scaling: float = 1.0,
+                    *, bm: int = 256, bn: int = 256, bk: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Fused y = x@W + scaling·x@A@C@B.  x may have leading batch dims."""
+    *lead, k = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, k)
+    # the rank-r pre-projection is tiny (M·r) — plain XLA ops
+    p = scaling * jnp.dot(jnp.dot(x2, a, preferred_element_type=jnp.float32),
+                          c.astype(jnp.float32))
+    p = p.astype(x.dtype)
+    # pad every dim to tile multiples (kernel requires exact tiling)
+    x2, pad_m = _pad_to(x2, bm, 0)
+    x2, pad_k = _pad_to(x2, bk, 1)
+    wp, _ = _pad_to(w, bk, 0)
+    wp, pad_n = _pad_to(wp, bn, 1)
+    pp, _ = _pad_to(p, bm, 0)
+    bp, _ = _pad_to(b, bn, 1)
+    out = tri_lora_matmul_kernel(x2, wp, pp, bp, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret)
+    out = out[:out.shape[0] - pad_m if pad_m else out.shape[0],
+              :n]
+    return out.reshape(*lead, n)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused tri-LoRA projection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tri_lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                        c: jnp.ndarray, b: jnp.ndarray,
+                        scaling: float) -> jnp.ndarray:
+    """y = x@W + scaling·((x@A)@C)@B, f32 accumulation, x dtype out."""
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    p = jnp.dot(jnp.dot(x, a, preferred_element_type=jnp.float32), c)
+    low = scaling * jnp.dot(p.astype(x.dtype), b,
+                            preferred_element_type=jnp.float32)
+    return (base + low).astype(x.dtype)

@@ -1,0 +1,65 @@
+"""Fused tri-LoRA projection kernel: y = x@W + P@B  (P = scaling·x@A@C).
+
+TPU adaptation of the paper's adapter (DESIGN.md §3): the base matmul x@W is
+MXU-bound; running the low-rank path as separate ops would re-read and
+re-write the (M, N) output from HBM.  Here the rank-r epilogue P@B is fused
+into the x@W tile loop: P is an (M, r) input (tiny — computed by two
+rank-r GEMMs outside), and each (bm, bn) output tile adds P_tile @ B_tile
+before write-back.  Extra HBM traffic ≈ M·r + r·N bytes ≈ 0.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (sequential on TPU) with an f32 VMEM
+accumulator scratch.  bm/bn/bk are multiples of the MXU tile (128) for the
+full-size path; the wrapper pads otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, p_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        # epilogue first: seed the accumulator with the low-rank tile
+        acc_ref[...] = jnp.dot(p_ref[...], b_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tri_lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, p: jnp.ndarray,
+                           b: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+                           bk: int = 512, interpret: bool = False):
+    """x (M,K), w (K,N), p (M,r) = scaling·x@A@C, b (r,N) → (M,N) x.dtype."""
+    m, k = x.shape
+    _, n = w.shape
+    r = p.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, r), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, p, b)

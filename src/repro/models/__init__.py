@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, get_config, list_configs  # noqa: F401

@@ -1,0 +1,364 @@
+"""Attention: GQA, optional qk-norm / bias / sliding window, train + decode.
+
+The training path can either run the pure-jnp reference or the Pallas flash
+kernel (``use_flash=True``); both are numerically validated against each other
+in the kernel tests.  The decode path attends one new token against a
+(possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, k = cfg.n_heads, (cfg.n_heads if cross else cfg.n_kv_heads)
+    keys = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(keys[0], (d, h * hd)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(keys[1], (d, k * hd)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(keys[2], (d, k * hd)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(keys[3], (h * hd, d))
+               * (1.0 / jnp.sqrt(h * hd))).astype(cfg.dtype),
+    }
+    if cfg.attn_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((k * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((k * hd,), cfg.dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), cfg.dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), cfg.dtype)}
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray, adapters,
+                 *, kv_from: Optional[jnp.ndarray] = None, cross: bool = False):
+    """Return q (B,S,H,hd), k,v (B,Skv,K,hd) — rope NOT yet applied."""
+    ad = adapters or {}
+    sc = cfg.lora_alpha / cfg.lora_rank
+    b, s, _ = x.shape
+    kv_x = x if kv_from is None else kv_from
+    skv = kv_x.shape[1]
+    h = cfg.n_heads
+    k_heads = h if cross else cfg.n_kv_heads
+    q = layers.dense(x, p["wq"], bias=p.get("bq"), adapter=ad.get("wq"),
+                     lora_scaling=sc).reshape(b, s, h, cfg.hd)
+    k = layers.dense(kv_x, p["wk"], bias=p.get("bk"), adapter=ad.get("wk"),
+                     lora_scaling=sc).reshape(b, skv, k_heads, cfg.hd)
+    v = layers.dense(kv_x, p["wv"], bias=p.get("bv"), adapter=ad.get("wv"),
+                     lora_scaling=sc).reshape(b, skv, k_heads, cfg.hd)
+    if cfg.qk_norm and not cross:
+        q = layers.rmsnorm(q, p["q_norm"]["scale"])
+        k = layers.rmsnorm(k, p["k_norm"]["scale"])
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, x: jnp.ndarray, positions) -> jnp.ndarray:
+    if cfg.pos_type == "rope":
+        return layers.apply_rope(x, positions, cfg.rope_theta)
+    if cfg.pos_type == "mrope":
+        return layers.apply_rope(x, positions, cfg.rope_theta,
+                                 sections=cfg.mrope_sections)
+    return x  # learned / none: positions handled at the embedding
+
+
+# ---------------------------------------------------------------------------
+# reference SDPA (grouped-query, causal, optional window)
+# ---------------------------------------------------------------------------
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+         causal: bool, window: int = 0,
+         kv_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k/v (B,Skv,K,hd); H % K == 0.  f32 softmax."""
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        # rows are the LAST sq queries of the skv-long sequence
+        qpos = jnp.arange(sq) + (skv - sq)
+        kpos = jnp.arange(skv)
+        mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid is not None:  # (B, Skv) extra validity (ring caches, padding)
+        mask = mask[None] & kv_valid[:, None, :]
+        mask = mask[:, None, None]            # (B,1,1,Sq,Skv)
+    else:
+        mask = mask[None, None, None]         # (1,1,1,Sq,Skv)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _head_parallel(q, k, v):
+    """When q-heads divide the `model` axis, expand GQA KV to full heads and
+    pin the head dim to `model` — attention intermediates (and their grads)
+    then shard 16-way across heads instead of living replicated.  The KV
+    duplication is an XLA-path cost only; the Pallas kernel uses BlockSpec
+    head-indexing instead (no materialized repeat)."""
+    m = layers._ambient_mesh()
+    if m is None or "model" not in m.axis_names:
+        return q, k, v
+    msz = m.shape["model"]
+    h, kh = q.shape[2], k.shape[2]
+    if h % msz != 0:
+        return q, k, v
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    def hint(x):
+        try:
+            axes = tuple(a for a in layers._BATCH_AXES if a in m.axis_names)
+            total = 1
+            for a in axes:
+                total *= m.shape[a]
+            b_ax = axes if x.shape[0] % total == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.PartitionSpec(b_ax, None, "model", None))
+        except Exception:
+            return x
+    return hint(q), hint(k), hint(v)
+
+
+# ---------------------------------------------------------------------------
+# blockwise SDPA ("XLA-flash"): online-softmax over KV chunks via lax.scan.
+# Used for long sequences where materializing (Sq, Skv) logits is impossible.
+# For sliding-window attention the KV span per q-chunk is a STATIC-size
+# dynamic slice, so compiled FLOPs are truly sub-quadratic (O(S·window)).
+# ---------------------------------------------------------------------------
+
+def blockwise_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool = True, window: int = 0,
+                   bq: int = 256, bk: int = 256) -> jnp.ndarray:
+    """Memory: O(bq·bk) logits tiles; every tile op is rematerialized in
+    backward (checkpointed q-chunks and kv-steps), so train-time residuals
+    stay O(bq·hd) per step — the XLA analogue of flash attention's backward.
+    For windowed attention the per-q-chunk KV span is a static-size dynamic
+    slice ⇒ compiled FLOPs are O(S·window), not O(S²)."""
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    scale = 1.0 / (float(hd) ** 0.5)
+    pad_q = (-sq) % bq                       # e.g. VLM fused 4096+256 patches
+    qg = jnp.moveaxis(q, 1, 2).reshape(b, kh, g, sq, hd)       # (B,K,G,Sq,hd)
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    sq_p = sq + pad_q
+    kt = jnp.moveaxis(k, 1, 2)                                 # (B,K,Skv,hd)
+    vt = jnp.moveaxis(v, 1, 2)
+
+    if window:
+        # static-size KV span per q chunk; front-padded by `span` and
+        # end-padded by pad_q so slices never clip (mask drops pad keys)
+        span = (-(-(window + bq) // bk)) * bk
+        span = min(span, ((skv + bk - 1) // bk) * bk)
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (span, pad_q), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (span, pad_q), (0, 0)))
+        n_kv = span // bk
+    else:
+        pad_kv = (-skv) % bk
+        if pad_kv:
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        n_kv = (skv + pad_kv) // bk
+
+    def _bhint(a):
+        from repro.models import layers as _l
+        return _l.batch_hint(a)
+
+    def _kv_hint(a):
+        # pin full-size KV (and its f32 grad carries) seq-sharded over
+        # `model`; per-block dynamic slices gather only one tile
+        m = layers._ambient_mesh()
+        if (m is None or "model" not in m.axis_names
+                or a.shape[2] % m.shape["model"] != 0):
+            return _bhint(a)
+        axes = tuple(x for x in layers._BATCH_AXES if x in m.axis_names)
+        total = 1
+        for x in axes:
+            total *= m.shape[x]
+        b_ax = axes if a.shape[0] % total == 0 else None
+        try:
+            return jax.lax.with_sharding_constraint(
+                a, jax.sharding.PartitionSpec(b_ax, None, "model", None))
+        except Exception:
+            return a
+    kt = _kv_hint(kt)
+    vt = _kv_hint(vt)
+
+    def q_chunk(qi):
+        q_first = qi * bq
+        qc = jax.lax.dynamic_slice_in_dim(qg, q_first, bq, axis=3)
+        qc = _bhint(qc.astype(jnp.float32) * scale)
+        qpos = q_first + jnp.arange(bq) + (skv - sq)
+
+        if window:
+            # padded-coords slice start: ends exactly at the chunk's last row
+            start = q_first + (skv - sq) + bq
+            kvk = jax.lax.dynamic_slice_in_dim(kt, start, span, axis=2)
+            kvv = jax.lax.dynamic_slice_in_dim(vt, start, span, axis=2)
+            pos0 = start - span                     # absolute pos of slice[0]
+        else:
+            kvk, kvv, pos0 = kt, vt, 0
+        kvk, kvv = _bhint(kvk), _bhint(kvv)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_first = ki * bk
+            kc = _bhint(jax.lax.dynamic_slice_in_dim(kvk, k_first, bk, axis=2))
+            vc = _bhint(jax.lax.dynamic_slice_in_dim(kvv, k_first, bk, axis=2))
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qc, kc.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            s = _bhint(s)
+            kpos = pos0 + k_first + jnp.arange(bk)
+            mask = (kpos[None, :] >= 0) & (kpos[None, :] < skv)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l_new = alpha * l_run + jnp.sum(p, axis=-1)
+            acc = _bhint(acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, bq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                          (m0, l0, a0), jnp.arange(n_kv))
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    chunks = jax.lax.map(jax.checkpoint(q_chunk),
+                         jnp.arange(sq_p // bq))               # (nq,B,K,G,bq,hd)
+    out = jnp.moveaxis(chunks, 0, 3).reshape(b, kh, g, sq_p, hd)[:, :, :, :sq]
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions,
+                   adapters=None, *, window: int = 0,
+                   impl: str = "auto") -> jnp.ndarray:
+    """impl: 'ref' (materialized logits), 'blockwise' (XLA-flash, long-seq
+    safe), 'flash' (Pallas kernel), or 'auto' (ref below 2k, else blockwise).
+    """
+    q, k, v = _project_qkv(cfg, p, x, adapters)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    if impl == "auto":
+        impl = "ref" if q.shape[1] <= 2048 else "blockwise"
+    if impl in ("blockwise_hp", "blockwise_cv") and q.shape[1] <= 2048:
+        impl = "ref"
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    elif impl == "blockwise_cv":   # opt-in custom-VJP flash backward (M10)
+        from repro.models.attention_cv import blockwise_sdpa_cv
+        if q.shape[1] % 256 == 0:
+            out = blockwise_sdpa_cv(q, k, v, True, window, 256, 256)
+        else:
+            out = blockwise_sdpa(q, k, v, causal=True, window=window)
+    elif impl == "blockwise_hp":   # opt-in head-parallel variant (§Perf)
+        q, k, v = _head_parallel(q, k, v)
+        out = blockwise_sdpa(q, k, v, causal=True, window=window)
+    elif impl == "blockwise":
+        out = blockwise_sdpa(q, k, v, causal=True, window=window)
+    else:
+        out = sdpa(q, k, v, causal=True, window=window)
+    b, s = x.shape[:2]
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ad = adapters or {}
+    return layers.dense(out.reshape(b, s, -1), p["wo"], adapter=ad.get("wo"),
+                        lora_scaling=sc)
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                    enc_out: jnp.ndarray, adapters=None) -> jnp.ndarray:
+    q, k, v = _project_qkv(cfg, p, x, adapters, kv_from=enc_out, cross=True)
+    if q.shape[1] * k.shape[1] > 4_194_304:     # long decoder seq: tile it
+        out = blockwise_sdpa(q, k, v, causal=False)
+    else:
+        out = sdpa(q, k, v, causal=False)
+    b, s = x.shape[:2]
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ad = adapters or {}
+    return layers.dense(out.reshape(b, s, -1), p["wo"], adapter=ad.get("wo"),
+                        lora_scaling=sc)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, ring-buffered KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                          cache: dict, positions, adapters=None,
+                          *, window: int = 0):
+    """x: (B, 1, D).  cache: {'k','v': (B, W, K, hd), 'idx': int32 scalar}.
+
+    ``W`` is the ring size (== window for SWA blocks, == max_len otherwise).
+    Keys are stored post-rope; with rotary embeddings relative offsets are
+    preserved, so ring overwrite is safe for windowed attention.
+    """
+    q, k_new, v_new = _project_qkv(cfg, p, x, adapters)
+    q = _rope(cfg, q, positions)
+    k_new = _rope(cfg, k_new, positions)
+
+    ring = cache["k"].shape[1]
+    idx = cache["idx"]                      # absolute position of the new token
+    slot = jnp.mod(idx, ring)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = {"k": k, "v": v, "idx": idx + 1}
+
+    # validity: slots [0, idx] until the ring wraps, then all slots
+    valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
+    valid = jnp.broadcast_to(valid, (x.shape[0], ring))
+    out = sdpa(q, k, v, causal=False, kv_valid=valid)
+    b = x.shape[0]
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ad = adapters or {}
+    y = layers.dense(out.reshape(b, 1, -1), p["wo"], adapter=ad.get("wo"),
+                     lora_scaling=sc)
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                  window: int = 0, dtype=None) -> dict:
+    ring = min(window, seq_len) if window else seq_len
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, ring, kh, hd), dt),
+        "v": jnp.zeros((batch, ring, kh, hd), dt),
+        "idx": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,171 @@
+"""Experimental custom-VJP blockwise attention (§Perf M10, opt-in).
+
+Autodiff through the blockwise forward stores full-sequence f32 dK/dV
+cotangent carries.  This hand-written flash backward (Dao et al. style)
+recomputes probability tiles from saved (q, k, v, lse) and accumulates
+dK/dV in the PARAM dtype (bf16), bounding the backward working set to
+O(tile) f32 + O(S) bf16.
+
+Opt-in via ``attn_impl='blockwise_cv'``; validated against jax.grad of the
+reference SDPA in tests/test_attention_cv.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _layout(q, k, v):
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = jnp.moveaxis(q, 1, 2).reshape(b, kh, g, sq, hd)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    return qg, kt, vt
+
+
+def _fwd_stats(qg, kt, vt, causal, window, bq, bk):
+    """Blockwise forward returning (out, lse) — lse = m + log l per row."""
+    b, kh, g, sq, hd = qg.shape
+    skv = kt.shape[2]
+    scale = 1.0 / (float(hd) ** 0.5)
+    n_kv = skv // bk
+
+    def q_chunk(qi):
+        q_first = qi * bq
+        qc = jax.lax.dynamic_slice_in_dim(qg, q_first, bq, 3)
+        qc = qc.astype(jnp.float32) * scale
+        qpos = q_first + jnp.arange(bq)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_first = ki * bk
+            kc = jax.lax.dynamic_slice_in_dim(kt, k_first, bk, 2)
+            vc = jax.lax.dynamic_slice_in_dim(vt, k_first, bk, 2)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qc, kc.astype(jnp.float32))
+            kpos = k_first + jnp.arange(bk)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, -1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m_new[..., None]),
+                          0.0)
+            l_new = alpha * l_run + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, bq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                          (m0, l0, a0), jnp.arange(n_kv))
+        l_safe = jnp.maximum(l_f, 1e-30)
+        o = acc / l_safe[..., None]
+        lse = m_f + jnp.log(l_safe)
+        return o, lse
+
+    outs, lses = jax.lax.map(q_chunk, jnp.arange(sq // bq))
+    o = jnp.moveaxis(outs, 0, 3).reshape(b, kh, g, sq, hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kh, g, sq)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def blockwise_sdpa_cv(q, k, v, causal: bool = True, window: int = 0,
+                      bq: int = 256, bk: int = 256):
+    """q (B,Sq,H,hd), k/v (B,Skv,K,hd); Sq,Skv must be bq/bk multiples."""
+    out, _ = _cv_fwd(q, k, v, causal, window, bq, bk)
+    return out
+
+
+def _cv_fwd(q, k, v, causal, window, bq, bk):
+    b, sq, h, hd = q.shape
+    qg, kt, vt = _layout(q, k, v)
+    o, lse = _fwd_stats(qg, kt, vt, causal, window, bq, bk)
+    out = jnp.moveaxis(o.reshape(b, h, sq, hd), 1, 2).astype(q.dtype)
+    return out, (q, k, v, out, lse)
+
+
+def _cv_bwd(causal, window, bq, bk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / (float(hd) ** 0.5)
+    qg, kt, vt = _layout(q, k, v)
+    og = jnp.moveaxis(out, 1, 2).reshape(b, kh, g, sq, hd)
+    dog = jnp.moveaxis(dout, 1, 2).reshape(b, kh, g, sq, hd)
+    # D_i = rowsum(dO * O)   (B,K,G,Sq) f32
+    d_row = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+
+    n_q = sq // bq
+    n_kv = skv // bk
+
+    # scan over KV blocks (outer); inner scan over q chunks accumulates the
+    # (bk, hd) dk/dv tiles in f32, stored back bf16 — dq accumulated f32 per
+    # q-chunk inside, emitted once per q chunk (summed over kv blocks)
+    def kv_block(dq_acc, ki):
+        k_first = ki * bk
+        kc = jax.lax.dynamic_slice_in_dim(kt, k_first, bk, 2).astype(jnp.float32)
+        vc = jax.lax.dynamic_slice_in_dim(vt, k_first, bk, 2).astype(jnp.float32)
+        kpos = k_first + jnp.arange(bk)
+
+        def q_chunk(carry, qi):
+            dk_t, dv_t = carry
+            q_first = qi * bq
+            qc = jax.lax.dynamic_slice_in_dim(qg, q_first, bq, 3)
+            qc = qc.astype(jnp.float32) * scale
+            lse_c = jax.lax.dynamic_slice_in_dim(lse, q_first, bq, 3)
+            do_c = jax.lax.dynamic_slice_in_dim(dog, q_first, bq, 3)
+            do_c = do_c.astype(jnp.float32)
+            dr_c = jax.lax.dynamic_slice_in_dim(d_row, q_first, bq, 3)
+            qpos = q_first + jnp.arange(bq)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qc, kc)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_c[..., None]), 0.0)
+            dv_t = dv_t + jnp.einsum("bkgqs,bkgqd->bksd", p, do_c)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", do_c, vc)
+            ds = p * (dp - dr_c[..., None])
+            dq_tile = jnp.einsum("bkgqs,bksd->bkgqd", ds, kc) * scale
+            dk_t = dk_t + jnp.einsum("bkgqs,bkgqd->bksd", ds, qc)
+            return (dk_t, dv_t), dq_tile
+
+        dk0 = jnp.zeros((b, kh, bk, hd), jnp.float32)
+        dv0 = jnp.zeros((b, kh, bk, hd), jnp.float32)
+        (dk_t, dv_t), dq_tiles = jax.lax.scan(jax.checkpoint(q_chunk),
+                                              (dk0, dv0), jnp.arange(n_q))
+        # dq accumulates ACROSS kv blocks in the carry — store bf16
+        dq_acc = dq_acc + jnp.moveaxis(dq_tiles, 0, 3).reshape(
+            b, kh, g, sq, hd).astype(dq_acc.dtype)
+        return dq_acc, (dk_t.astype(k.dtype), dv_t.astype(v.dtype))
+
+    dq0 = jnp.zeros((b, kh, g, sq, hd), jnp.float32)
+    dq_acc, (dk_blocks, dv_blocks) = jax.lax.scan(kv_block, dq0,
+                                                  jnp.arange(n_kv))
+    # (n_kv, B, K, bk, hd) -> (B, K, Skv, hd), bf16 accumulation already done
+    dk = jnp.moveaxis(dk_blocks, 0, 2).reshape(b, kh, skv, hd)
+    dv = jnp.moveaxis(dv_blocks, 0, 2).reshape(b, kh, skv, hd)
+
+    dq = jnp.moveaxis(dq_acc.reshape(b, h, sq, hd), 1, 2).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 1, 2).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 1, 2).astype(v.dtype)
+    return dq, dk, dv
+
+
+blockwise_sdpa_cv.defvjp(_cv_fwd, _cv_bwd)

@@ -1,0 +1,208 @@
+"""Top-level model API: init / train forward / loss / decode.
+
+params = {'base': …frozen…, 'adapter': …tri-LoRA, trainable…}
+
+Batch conventions
+-----------------
+train:   {'tokens': (B,S) i32, 'labels': (B,S) i32,
+          'positions': (B,S) i32  or (B,S,3) for M-RoPE,
+          ['vision': (B,P,D)]  (vlm stub embeds, prepended — early fusion),
+          ['frames': (B,F,D)]  (audio stub embeds, encoder input)}
+decode:  {'token': (B,1) i32, 'positions': (B,1) or (B,1,3) i32}
+         + cache pytree from :func:`init_decode_cache`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ModelConfig
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.with_overrides(n_layers=cfg.n_enc_layers,
+                              layer_pattern=("attn",), window=0,
+                              n_kv_heads=cfg.n_heads)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    base: dict = {"embed": layers.init_embedding(ks[0], cfg.padded_vocab,
+                                                 cfg.d_model, cfg.dtype),
+                  "final_norm": layers.init_norm(cfg.d_model, cfg.norm_type,
+                                                 cfg.dtype)}
+    groups, tail = transformer.init_stack(ks[1], cfg, cross=cfg.enc_dec)
+    base["groups"], base["tail"] = groups, tail
+    if cfg.pos_type == "learned":
+        base["pos_embed"] = (jax.random.normal(
+            ks[2], (cfg.max_target_positions, cfg.d_model)) * 0.02
+        ).astype(cfg.dtype)
+    if cfg.enc_dec:
+        ecfg = _enc_cfg(cfg)
+        eg, et = transformer.init_stack(ks[3], ecfg)
+        base["encoder"] = {
+            "groups": eg, "tail": et,
+            "final_norm": layers.init_norm(cfg.d_model, cfg.norm_type,
+                                           cfg.dtype),
+            "pos_embed": (jax.random.normal(
+                ks[4], (cfg.enc_frames, cfg.d_model)) * 0.02).astype(cfg.dtype),
+        }
+    ag, at = transformer.init_stack_adapters(ks[5], cfg, cross=cfg.enc_dec)
+    adapter = {"groups": ag, "tail": at}
+    return {"base": base, "adapter": adapter}
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, base: dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over stub frame embeddings (B,F,D)."""
+    enc = base["encoder"]
+    ecfg = _enc_cfg(cfg)
+    x = frames.astype(cfg.dtype) + enc["pos_embed"][None, :frames.shape[1]]
+    ad_g, ad_t = _none_adapters_like(ecfg, enc["groups"] is not None)
+    x, _ = transformer.run_stack(ecfg, enc["groups"], enc["tail"],
+                                 ad_g, ad_t, x,
+                                 positions=None, causal=False)
+    return layers.norm(x, enc["final_norm"], cfg.norm_type)
+
+
+def _none_adapters_like(cfg: ModelConfig, has_groups: bool):
+    """Adapter placeholders (all None) matching the stack structure."""
+    q, pattern, rem = cfg.stack_plan()
+    g = {str(i): None for i in range(len(pattern))} if has_groups else None
+    # scan requires xs leaves; None per block is a valid (empty) pytree node
+    groups = g
+    tail = tuple(None for _ in rem)
+    return groups, tail
+
+
+def forward_hidden(cfg: ModelConfig, base: dict, adapter: dict, batch: dict,
+                   *, attn_impl: str = "auto", use_rwkv_kernel: bool = False):
+    """Embeddings → stack → final norm.  Returns (hidden (B,S',D), aux)."""
+    tokens = batch["tokens"]
+    x = layers.batch_hint(layers.embed(tokens, base["embed"]))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                     tokens.shape)
+    if cfg.pos_type == "learned":
+        pos_idx = positions if positions.ndim == 2 else positions[..., 0]
+        x = x + jnp.take(base["pos_embed"], pos_idx, axis=0)
+    n_prefix = 0
+    if cfg.vision_patches and "vision" in batch:
+        x = jnp.concatenate([batch["vision"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["vision"].shape[1]
+        # positions for the fused sequence must already cover P+S
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, base, batch["frames"])
+    x, aux = transformer.run_stack(
+        cfg, base["groups"], base["tail"], adapter["groups"], adapter["tail"],
+        x, positions, enc_out=enc_out, causal=True, attn_impl=attn_impl,
+        use_rwkv_kernel=use_rwkv_kernel)
+    x = layers.norm(x, base["final_norm"], cfg.norm_type)
+    return layers.batch_hint(x), aux, n_prefix
+
+
+def forward(cfg: ModelConfig, base: dict, adapter: dict, batch: dict,
+            pad_vocab: bool = False, **kw) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits f32 over the TEXT positions, aux loss).  Shape
+    (B,S,padded_vocab) with -inf pad logits when ``pad_vocab`` (the
+    distributed path — keeps the vocab dim shardable), else (B,S,vocab)."""
+    x, aux, n_prefix = forward_hidden(cfg, base, adapter, batch, **kw)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = layers.unembed(x, base["embed"], cfg.vocab_size)
+    if not pad_vocab and cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    return logits, aux
+
+
+_CE_CHUNK = 512
+_CE_CHUNK_THRESHOLD = 2 ** 28   # S·V above this → chunked loss
+
+
+def _ce_stats(cfg, hidden, table, labels):
+    """(Σ nll·w, Σ correct·w, Σ w) for one hidden chunk — logits transient."""
+    logits = layers.unembed(hidden, table, cfg.vocab_size)     # (B, s, Vp)
+    weights = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    correct = (jnp.argmax(logits, -1) == labels) * weights
+    return (jnp.sum(nll * weights), jnp.sum(correct), jnp.sum(weights))
+
+
+def loss_fn(cfg: ModelConfig, adapter: dict, base: dict, batch: dict,
+            **kw) -> tuple[jnp.ndarray, dict]:
+    """Causal-LM cross entropy over labels >= 0.  adapter-first so that
+    ``jax.grad`` differentiates only the tri-LoRA parameters.
+
+    For large S·V the loss runs over sequence chunks (lax.map + remat) so
+    the (B, S, V) logits tensor never materializes."""
+    hidden, aux, n_prefix = forward_hidden(cfg, base, adapter, batch, **kw)
+    if n_prefix:
+        hidden = hidden[:, n_prefix:]
+    labels = batch["labels"]
+    table = base["embed"]
+    s = hidden.shape[1]
+    if s * cfg.padded_vocab > _CE_CHUNK_THRESHOLD and s % _CE_CHUNK == 0:
+        n = s // _CE_CHUNK
+        h_c = hidden.reshape(hidden.shape[0], n, _CE_CHUNK, -1).swapaxes(0, 1)
+        l_c = labels.reshape(labels.shape[0], n, _CE_CHUNK).swapaxes(0, 1)
+        stats = jax.lax.map(
+            jax.checkpoint(lambda hl: _ce_stats(cfg, hl[0], table, hl[1])),
+            (h_c, l_c))
+        nll_sum, corr_sum, w_sum = (jnp.sum(t) for t in stats)
+    else:
+        nll_sum, corr_sum, w_sum = _ce_stats(cfg, hidden, table, labels)
+    denom = jnp.maximum(w_sum, 1.0)
+    ce = nll_sum / denom
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "acc": corr_sum / denom}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    g, t = transformer.init_stack_cache(cfg, batch, seq_len,
+                                        cross=cfg.enc_dec)
+    return {"groups": g, "tail": t}
+
+
+def decode_step(cfg: ModelConfig, base: dict, adapter: dict, cache: dict,
+                batch: dict, pad_vocab: bool = False) -> tuple[jnp.ndarray, dict]:
+    """One new token against the cache.  Returns (logits (B,1,V), new cache).
+    ``pad_vocab`` keeps the padded (shardable) vocab dim — distributed path."""
+    token = batch["token"]
+    positions = batch["positions"]
+    x = layers.batch_hint(layers.embed(token, base["embed"]))
+    if cfg.pos_type == "learned":
+        pos_idx = positions if positions.ndim == 2 else positions[..., 0]
+        x = x + jnp.take(base["pos_embed"], pos_idx, axis=0)
+    x, new_g, new_t = transformer.run_stack_decode(
+        cfg, base["groups"], base["tail"], adapter["groups"], adapter["tail"],
+        cache["groups"], cache["tail"], x, positions)
+    x = layers.norm(x, base["final_norm"], cfg.norm_type)
+    logits = layers.unembed(x, base["embed"], cfg.vocab_size)
+    if not pad_vocab and cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    return logits, {"groups": new_g, "tail": new_t}

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x → [gate branch, main branch] linears → main: temporal conv1d (w=4)
+→ RG-LRU → ⊙ GeLU(gate) → output linear.
+
+RG-LRU recurrence (per channel):
+    r_t = σ(x_t·W_a + b_a)            recurrence gate
+    i_t = σ(x_t·W_x + b_x)            input gate
+    a_t = exp(-c·softplus(Λ)·r_t)     data-dependent decay, c = 8
+    h_t = a_t·h_{t-1} + sqrt(1 - a_t²)·(i_t·x_t)
+
+Training uses ``lax.associative_scan`` (first-order linear recurrence is
+associative) — TPU-friendly log-depth; decode carries (conv tail, h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> dict:
+    d, rd, cw = cfg.d_model, cfg.rnn_d, cfg.conv1d_width
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d)
+    dt = cfg.dtype
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    lam_unif = jax.random.uniform(ks[0], (rd,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam_unif) / _C))  # inverse softplus
+    return {
+        "w_in": (jax.random.normal(ks[1], (d, 2 * rd)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cw, rd)) / jnp.sqrt(cw)).astype(dt),
+        "conv_b": jnp.zeros((rd,), dt),
+        "lam": lam.astype(jnp.float32),
+        "w_a": (jax.random.normal(ks[3], (rd, rd)) / jnp.sqrt(rd)).astype(dt),
+        "b_a": jnp.zeros((rd,), dt),
+        "w_x": (jax.random.normal(ks[4], (rd, rd)) / jnp.sqrt(rd)).astype(dt),
+        "b_x": jnp.zeros((rd,), dt),
+        "w_out": (jax.random.normal(ks[5], (rd, d)) / jnp.sqrt(rd)).astype(dt),
+    }
+
+
+def _gates(p: dict, x: jnp.ndarray):
+    """x (…, rd) → decay a (f32), gated input b (f32)."""
+    r = jax.nn.sigmoid((x @ p["w_a"] + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_x"] + p["b_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def _conv1d(p: dict, x: jnp.ndarray, tail: jnp.ndarray | None):
+    """Causal depthwise temporal conv, width cw.  tail: (B, cw-1, rd)."""
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                    # (B, T+cw-1, rd)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(cw))
+    return out + p["conv_b"], xp[:, -(cw - 1):]
+
+
+def _chunked_linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                         chunk: int = 512) -> jnp.ndarray:
+    """h_t = a_t·h_{t-1} + b_t over axis 1, computed chunk-by-chunk: an
+    associative scan inside each (checkpointed) chunk, a lax.scan carrying h
+    across chunks — bounds backward residuals to one chunk."""
+    bsz, t, d = a.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    n = (t + pad) // chunk
+    a_c = a.reshape(bsz, n, chunk, d).swapaxes(0, 1)
+    b_c = b.reshape(bsz, n, chunk, d).swapaxes(0, 1)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    @jax.checkpoint
+    def chunk_step(h, ab):
+        ac, bc = ab
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hs = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    _, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h = hs.swapaxes(0, 1).reshape(bsz, t + pad, d)
+    return h[:, :t]
+
+
+def rglru_block(cfg: ModelConfig, p: dict, x: jnp.ndarray, state,
+                adapters=None):
+    """x (B,T,D); state {'conv': (B,cw-1,rd), 'h': (B,rd) f32} or None."""
+    ad = adapters or {}
+    sc = cfg.lora_alpha / cfg.lora_rank
+    conv_tail = state["conv"] if state else None
+    h0 = state["h"] if state else jnp.zeros((x.shape[0], cfg.rnn_d), jnp.float32)
+
+    z = layers.dense(x, p["w_in"], adapter=ad.get("w_in"), lora_scaling=sc)
+    main, gate = jnp.split(z, 2, axis=-1)
+    main, new_tail = _conv1d(p, main, conv_tail)
+    a, b = _gates(p, main)                                     # (B,T,rd) f32
+
+    h = _chunked_linear_scan(a, b, h0)
+
+    y = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = layers.dense(y, p["w_out"], adapter=ad.get("w_out"), lora_scaling=sc)
+    return out, {"conv": new_tail, "h": h[:, -1]}
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.rnn_d), cfg.dtype),
+        "h": jnp.zeros((batch, cfg.rnn_d), jnp.float32),
+    }

@@ -1,0 +1,212 @@
+"""RWKV-6 "Finch" block — attention-free token mixing with data-dependent
+decay (arXiv:2404.05892).
+
+Time-mix: data-dependent lerp (ddlerp) of (x_t, x_{t-1}) produces r,k,v,w,g;
+the WKV recurrence keeps a per-head (hd × hd) state:
+
+    y_t = r_t · (S_{t-1} + diag(u)·k_t·v_tᵀ)
+    S_t = diag(w_t)·S_{t-1} + k_t·v_tᵀ          w_t = exp(-exp(ŵ_t)) ∈ (0,1)
+
+Channel-mix: squared-ReLU two-layer MLP with receptance gating.
+
+Tri-LoRA attaches to the r/k/v/o projections of the time-mix (the paper's
+"attention module" does not exist here — documented deviation, DESIGN.md §4).
+
+The training path uses ``lax.scan`` over time (reference) or the chunked
+Pallas kernel (:mod:`repro.kernels.rwkv6`).  Decode carries
+(shift states, WKV state) — O(1) per token, which is what makes the
+``long_500k`` shape native for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+MIX_LORA = 32   # ddlerp low-rank width
+W_LORA = 64     # decay low-rank width
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 10)
+    s = 1.0 / jnp.sqrt(d)
+    dt = cfg.dtype
+    return {
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((5, d), dt),                        # r,k,v,w,g lerp bases
+        "mix_a": (jax.random.normal(ks[0], (d, 5, MIX_LORA)) * s).astype(dt),
+        "mix_b": jnp.zeros((5, MIX_LORA, d), dt),
+        "w0": jnp.full((d,), -6.0, dt),                     # slow decay at init
+        "w_a": (jax.random.normal(ks[1], (d, W_LORA)) * s).astype(dt),
+        "w_b": jnp.zeros((W_LORA, d), dt),
+        "u": jnp.zeros((h, hd), dt),
+        "wr": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[3], (d, d)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[4], (d, d)) * s).astype(dt),
+        "wg": (jax.random.normal(ks[5], (d, d)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[6], (d, d)) * s).astype(dt),
+        "ln_x": jnp.ones((d,), dt),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "wk": (jax.random.normal(ks[0], (d, f)) / jnp.sqrt(d)).astype(dt),
+        "wv": (jax.random.normal(ks[1], (f, d)) / jnp.sqrt(f)).astype(dt),
+        "wr": (jax.random.normal(ks[2], (d, d)) / jnp.sqrt(d)).astype(dt),
+    }
+
+
+def _ddlerp(p: dict, x: jnp.ndarray, xx: jnp.ndarray):
+    """Data-dependent lerp producing the five mixed inputs (r,k,v,w,g)."""
+    base = x + xx * p["mu_x"]
+    lora = jnp.tanh(jnp.einsum("...d,dfl->...fl", base, p["mix_a"]))
+    delta = jnp.einsum("...fl,fld->...fd", lora, p["mix_b"])   # (...,5,d)
+    mixed = x[..., None, :] + xx[..., None, :] * (p["mu"] + delta)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _rkvwg(cfg: ModelConfig, p: dict, x: jnp.ndarray, xx: jnp.ndarray,
+           adapters=None):
+    ad = adapters or {}
+    sc = cfg.lora_alpha / cfg.lora_rank
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = layers.dense(xr, p["wr"], adapter=ad.get("wr"), lora_scaling=sc)
+    k = layers.dense(xk, p["wk"], adapter=ad.get("wk"), lora_scaling=sc)
+    v = layers.dense(xv, p["wv"], adapter=ad.get("wv"), lora_scaling=sc)
+    g = jax.nn.silu(x=(xg @ p["wg"]).astype(jnp.float32))
+    w_hat = p["w0"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["w_a"]) @ p["w_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_hat))                               # (…, d) ∈ (0,1)
+    return r, k, v, w, g
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Reference WKV recurrence via lax.scan over time.
+
+    r,k,v,w: (B,T,H,hd) — w already in (0,1);  u: (H,hd);
+    state: (B,H,hd,hd) carried (key-dim × value-dim).
+    Returns y (B,T,H,hd) f32, new state.
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inputs):
+        rt, kt, vt, wt = inputs          # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked WKV (same math as the Pallas kernel, pure jnp): scan over
+    time chunks with dense intra-chunk algebra.  Log-space decay keeps every
+    exponent ≤ 0.  Preferred over the naive per-step scan for long T — HLO
+    is O(1) size with T/chunk scan steps of matmul work."""
+    b, t, h, hd = r.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zeros)
+        k = jnp.pad(k, zeros)
+        v = jnp.pad(v, zeros)
+        w = jnp.pad(w, zeros, constant_values=1.0)
+    tt = t + pad
+    n_chunks = tt // chunk
+    rf, kf, vf, wf = (jnp.moveaxis(a, 1, 2).astype(jnp.float32)
+                      .reshape(b * h, n_chunks, chunk, hd)
+                      for a in (r, k, v, w))
+    uf = jnp.broadcast_to(u.astype(jnp.float32), (b, h, hd)).reshape(b * h, hd)
+    s0 = state.astype(jnp.float32).reshape(b * h, hd, hd)
+
+    t_idx = jnp.arange(chunk)
+    strict = (t_idx[None, :, None] > t_idx[None, None, :])      # (1,L,L)
+
+    def step(s, inp):
+        rc, kc, vc, wc = inp                                    # (BH,L,hd)
+        lw = jnp.cumsum(jnp.log(jnp.maximum(wc, 1e-30)), axis=1)
+        lw_prev = jnp.concatenate(
+            [jnp.zeros_like(lw[:, :1]), lw[:, :-1]], axis=1)
+        y_inter = jnp.einsum("zti,zij->ztj", rc * jnp.exp(lw_prev), s)
+        expo = lw_prev[:, :, None, :] - lw[:, None, :, :]       # (BH,L,L,hd)
+        e = jnp.where(strict[..., None], jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        att = jnp.einsum("zti,zsi,ztsi->zts", rc, kc, e)
+        diag = jnp.sum(rc * uf[:, None, :] * kc, axis=-1)       # (BH,L)
+        y = y_inter + jnp.einsum("zts,zsj->ztj", att, vc) + diag[..., None] * vc
+        decay_all = jnp.exp(lw[:, -1])                          # (BH,hd)
+        k_scaled = kc * jnp.exp(lw[:, -1][:, None, :] - lw)
+        s_new = decay_all[:, :, None] * s + jnp.einsum(
+            "zti,ztj->zij", k_scaled, vc)
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(step, s0, tuple(
+        jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, h, tt, hd)
+    y = jnp.moveaxis(y, 1, 2)[:, :t]
+    return y, s_final.reshape(b, h, hd, hd)
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray, state,
+             adapters=None, *, use_kernel: bool = False):
+    """x (B,T,D); state {'shift': (B,D), 'wkv': (B,H,hd,hd)} or None (zeros)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype),
+                 "wkv": jnp.zeros((b, h, hd, hd), jnp.float32)}
+    prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    r, k, v, w, g = _rkvwg(cfg, p, x, xx, adapters)
+    rh, kh, vh, wh = (a.reshape(b, t, h, hd) for a in (r, k, v, w))
+    if use_kernel:
+        from repro.kernels.rwkv6 import ops as wkv_ops
+        y, new_wkv = wkv_ops.wkv6(rh, kh, vh, wh, p["u"], state["wkv"])
+    elif t > 256:
+        y, new_wkv = wkv_chunked(rh, kh, vh, wh, p["u"], state["wkv"])
+    else:
+        y, new_wkv = wkv_scan(rh, kh, vh, wh, p["u"], state["wkv"])
+    y = layers.group_rmsnorm(y.reshape(b, t, d), p["ln_x"], h)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ad = adapters or {}
+    out = layers.dense(y, p["wo"], adapter=ad.get("wo"), lora_scaling=sc)
+    new_state = {"shift": x[:, -1], "wkv": new_wkv}
+    return out, new_state
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray, state):
+    """state: {'shift': (B,D)} or None."""
+    b, t, d = x.shape
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype)}
+    prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32)))
+    out = jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)) * \
+        (k.astype(x.dtype) @ p["wv"]).astype(jnp.float32)
+    return out.astype(x.dtype), {"shift": x[:, -1]}
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    h, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    return {
+        "tm": {"shift": jnp.zeros((batch, d), cfg.dtype),
+               "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d), cfg.dtype)},
+    }

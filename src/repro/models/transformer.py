@@ -1,0 +1,323 @@
+"""Block assembly: init / train-forward / decode for every block kind.
+
+Layer stacking follows the config's ``layer_pattern``: the stack is
+``q = n_layers // len(pattern)`` scanned repetitions of the pattern (params
+stacked on a leading group axis, ``lax.scan`` + optional remat) plus an
+unrolled remainder ("tail").  This keeps HLO size O(pattern) instead of
+O(n_layers) — essential for compiling 64–80-layer models against a
+512-device mesh.
+
+Caches/recurrent state mirror the same (groups, tail) structure so decode
+scans params and cache together.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tri_lora
+from repro.models import attention, layers, moe, rglru, rwkv
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _adapter_shapes(cfg: ModelConfig, kind: str, cross: bool) -> dict:
+    d, hd, h, k = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    f, rd = cfg.d_ff, cfg.rnn_d
+    if kind in ("attn", "swa"):
+        shapes = {"wq": (d, h * hd), "wk": (d, k * hd),
+                  "wv": (d, k * hd), "wo": (h * hd, d)}
+        out = {"attn": {t: shapes[t] for t in cfg.lora_targets if t in shapes}}
+        if cross:
+            xs = {"wq": (d, h * hd), "wk": (d, h * hd),
+                  "wv": (d, h * hd), "wo": (h * hd, d)}
+            out["xattn"] = {t: xs[t] for t in cfg.lora_targets if t in xs}
+        if cfg.lora_mlp and not cfg.is_moe:
+            if cfg.mlp_type == "swiglu":
+                out["mlp"] = {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+            else:
+                out["mlp"] = {"w_in": (d, f), "w_out": (f, d)}
+        return out
+    if kind == "rwkv6":
+        # the paper's attention attachment point does not exist; adapt the
+        # time-mix r/k/v/o projections instead (DESIGN.md §4)
+        return {"tm": {t: (d, d) for t in ("wr", "wk", "wv", "wo")}}
+    if kind == "rglru":
+        return {"rec": {"w_in": (d, 2 * rd), "w_out": (rd, d)}}
+    raise ValueError(kind)
+
+
+def init_block_adapters(key, cfg: ModelConfig, kind: str, *,
+                        cross: bool = False) -> dict:
+    spec = _adapter_shapes(cfg, kind, cross)
+    flat = [(m, t, s) for m, ts in spec.items() for t, s in ts.items()]
+    ks = jax.random.split(key, max(len(flat), 1))
+    out: dict = {m: {} for m in spec}
+    for kk, (m, t, (din, dout)) in zip(ks, flat):
+        out[m][t] = tri_lora.init_adapter(kk, din, dout, cfg.lora_rank,
+                                          jnp.float32)
+    return out
+
+
+def init_block(key, cfg: ModelConfig, kind: str, *, cross: bool = False,
+               causal: bool = True) -> dict:
+    del causal
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    nt = cfg.norm_type
+    if kind in ("attn", "swa"):
+        p = {"ln1": layers.init_norm(d, nt, cfg.dtype),
+             "attn": attention.init_attn(ks[0], cfg),
+             "ln2": layers.init_norm(d, nt, cfg.dtype)}
+        if cross:
+            p["ln_x"] = layers.init_norm(d, nt, cfg.dtype)
+            p["xattn"] = attention.init_attn(ks[1], cfg, cross=True)
+        if cfg.is_moe:
+            p["moe"] = moe.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = layers.init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_type, cfg.dtype)
+        return p
+    if kind == "rwkv6":
+        return {"ln1": layers.init_norm(d, nt, cfg.dtype),
+                "tm": rwkv.init_time_mix(ks[0], cfg),
+                "ln2": layers.init_norm(d, nt, cfg.dtype),
+                "cm": rwkv.init_channel_mix(ks[1], cfg)}
+    if kind == "rglru":
+        return {"ln1": layers.init_norm(d, nt, cfg.dtype),
+                "rec": rglru.init_rglru_block(ks[0], cfg),
+                "ln2": layers.init_norm(d, nt, cfg.dtype),
+                "mlp": layers.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                       cfg.dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-block apply (train)
+# ---------------------------------------------------------------------------
+
+def block_apply(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
+                x: jnp.ndarray, positions, *, enc_out=None, causal=True,
+                attn_impl="auto", use_rwkv_kernel=False):
+    ad = ad or {}
+    nt = cfg.norm_type
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        h = layers.norm(x, p["ln1"], nt)
+        if causal:
+            y = attention.self_attention(cfg, p["attn"], h, positions,
+                                         ad.get("attn"), window=window,
+                                         impl=attn_impl)
+        else:  # encoder: bidirectional
+            q, k, v = attention._project_qkv(cfg, p["attn"], h, ad.get("attn"))
+            o = attention.sdpa(q, k, v, causal=False)
+            b, s = h.shape[:2]
+            y = layers.dense(o.reshape(b, s, -1), p["attn"]["wo"],
+                             adapter=(ad.get("attn") or {}).get("wo"),
+                             lora_scaling=cfg.lora_alpha / cfg.lora_rank)
+        x = x + y
+        if "xattn" in p:
+            h = layers.norm(x, p["ln_x"], nt)
+            x = x + attention.cross_attention(cfg, p["xattn"], h, enc_out,
+                                              ad.get("xattn"))
+        h = layers.norm(x, p["ln2"], nt)
+        if cfg.is_moe:
+            y, aux = moe.moe_mlp(cfg, p["moe"], h)
+        else:
+            y = layers.mlp(h, p["mlp"], cfg.mlp_type, adapters=ad.get("mlp"),
+                           lora_scaling=cfg.lora_alpha / cfg.lora_rank)
+        return x + y, aux
+    if kind == "rwkv6":
+        h = layers.norm(x, p["ln1"], nt)
+        y, _ = rwkv.time_mix(cfg, p["tm"], h, None, ad.get("tm"),
+                             use_kernel=use_rwkv_kernel)
+        x = x + y
+        h = layers.norm(x, p["ln2"], nt)
+        y, _ = rwkv.channel_mix(cfg, p["cm"], h, None)
+        return x + y, aux
+    if kind == "rglru":
+        h = layers.norm(x, p["ln1"], nt)
+        y, _ = rglru.rglru_block(cfg, p["rec"], h, None, ad.get("rec"))
+        x = x + y
+        h = layers.norm(x, p["ln2"], nt)
+        x = x + layers.mlp(h, p["mlp"], cfg.mlp_type)
+        return x, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-block decode (one token, carries cache/state)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     *, cross: bool = False) -> dict:
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        c = attention.init_kv_cache(cfg, batch, seq_len, window=window)
+        if cross:
+            c["xk"] = jnp.zeros((batch, cfg.enc_frames, cfg.n_heads, cfg.hd),
+                                cfg.dtype)
+            c["xv"] = jnp.zeros((batch, cfg.enc_frames, cfg.n_heads, cfg.hd),
+                                cfg.dtype)
+        return c
+    if kind == "rwkv6":
+        return rwkv.init_state(cfg, batch)
+    if kind == "rglru":
+        return rglru.init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_decode(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
+                 cache: dict, x: jnp.ndarray, positions):
+    ad = ad or {}
+    nt = cfg.norm_type
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        h = layers.norm(x, p["ln1"], nt)
+        y, kv = attention.decode_self_attention(
+            cfg, p["attn"], h, {k: cache[k] for k in ("k", "v", "idx")},
+            positions, ad.get("attn"), window=window)
+        x = x + y
+        new_cache = dict(kv)
+        if "xattn" in p:
+            h = layers.norm(x, p["ln_x"], nt)
+            q = layers.dense(h, p["xattn"]["wq"]).reshape(
+                x.shape[0], 1, cfg.n_heads, cfg.hd)
+            o = attention.sdpa(q, cache["xk"], cache["xv"], causal=False)
+            y = layers.dense(o.reshape(x.shape[0], 1, -1), p["xattn"]["wo"])
+            x = x + y
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        h = layers.norm(x, p["ln2"], nt)
+        if cfg.is_moe:
+            y, _ = moe.moe_mlp(cfg, p["moe"], h)
+        else:
+            y = layers.mlp(h, p["mlp"], cfg.mlp_type, adapters=ad.get("mlp"),
+                           lora_scaling=cfg.lora_alpha / cfg.lora_rank)
+        return x + y, new_cache
+    if kind == "rwkv6":
+        h = layers.norm(x, p["ln1"], nt)
+        y, tm = rwkv.time_mix(cfg, p["tm"], h, cache["tm"], ad.get("tm"))
+        x = x + y
+        h = layers.norm(x, p["ln2"], nt)
+        y, cm = rwkv.channel_mix(cfg, p["cm"], h, cache["cm"])
+        return x + y, {"tm": tm, "cm": cm}
+    if kind == "rglru":
+        h = layers.norm(x, p["ln1"], nt)
+        y, st = rglru.rglru_block(cfg, p["rec"], h, cache, ad.get("rec"))
+        x = x + y
+        h = layers.norm(x, p["ln2"], nt)
+        x = x + layers.mlp(h, p["mlp"], cfg.mlp_type)
+        return x, st
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack init: (groups scanned, tail unrolled)
+# ---------------------------------------------------------------------------
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_stack(key, cfg: ModelConfig, *, cross: bool = False) -> tuple:
+    """Returns (groups_params, tail_params) following cfg.stack_plan()."""
+    q, pattern, rem = cfg.stack_plan()
+    n_per_group = len(pattern)
+    keys = jax.random.split(key, q * n_per_group + len(rem))
+    groups = []
+    for gi in range(q):
+        g = {str(i): init_block(keys[gi * n_per_group + i], cfg, kind,
+                                cross=cross)
+             for i, kind in enumerate(pattern)}
+        groups.append(g)
+    tail = tuple(init_block(keys[q * n_per_group + i], cfg, kind, cross=cross)
+                 for i, kind in enumerate(rem))
+    return (_stack(groups) if q else None), tail
+
+
+def init_stack_adapters(key, cfg: ModelConfig, *, cross: bool = False) -> tuple:
+    q, pattern, rem = cfg.stack_plan()
+    n = len(pattern)
+    keys = jax.random.split(key, q * n + len(rem))
+    groups = [{str(i): init_block_adapters(keys[g * n + i], cfg, kind,
+                                           cross=cross)
+               for i, kind in enumerate(pattern)} for g in range(q)]
+    tail = tuple(init_block_adapters(keys[q * n + i], cfg, kind, cross=cross)
+                 for i, kind in enumerate(rem))
+    return (_stack(groups) if q else None), tail
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                     cross: bool = False) -> tuple:
+    q, pattern, rem = cfg.stack_plan()
+    groups = [{str(i): init_block_cache(cfg, kind, batch, seq_len, cross=cross)
+               for i, kind in enumerate(pattern)} for _ in range(q)]
+    tail = tuple(init_block_cache(cfg, kind, batch, seq_len, cross=cross)
+                 for kind in rem)
+    return (_stack(groups) if q else None), tail
+
+
+# ---------------------------------------------------------------------------
+# stack apply
+# ---------------------------------------------------------------------------
+
+def run_stack(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
+              x: jnp.ndarray, positions, *, enc_out=None, causal=True,
+              attn_impl="auto", use_rwkv_kernel=False):
+    """Train-time forward through the whole stack.  Returns (x, aux_sum)."""
+    pattern = cfg.layer_pattern
+    apply_kw = dict(enc_out=enc_out, causal=causal, attn_impl=attn_impl,
+                    use_rwkv_kernel=use_rwkv_kernel)
+
+    def group_fn(carry, scanned):
+        h, aux = carry
+        gp, gad = scanned
+        for i, kind in enumerate(pattern):
+            # sequence-parallel anchor: remat-saved carries stay fully sharded
+            h = layers.batch_hint(h, seq_parallel=True)
+            h, a = block_apply(cfg, kind, gp[str(i)], gad[str(i)], h,
+                               positions, **apply_kw)
+            aux = aux + a
+        return (layers.batch_hint(h, seq_parallel=True), aux), None
+
+    fn = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    aux = jnp.zeros((), jnp.float32)
+    if groups_p is not None:
+        (x, aux), _ = jax.lax.scan(fn, (x, aux), (groups_p, groups_ad))
+    q, _, rem = cfg.stack_plan()
+    for i, kind in enumerate(rem):
+        x, a = block_apply(cfg, kind, tail_p[i], tail_ad[i], x, positions,
+                           **apply_kw)
+        aux = aux + a
+    return x, aux
+
+
+def run_stack_decode(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
+                     groups_cache, tail_cache, x: jnp.ndarray, positions):
+    """One-token decode through the stack; returns (x, new caches)."""
+    pattern = cfg.layer_pattern
+
+    def group_fn(h, scanned):
+        gp, gad, gc = scanned
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            h, new_c[str(i)] = block_decode(cfg, kind, gp[str(i)], gad[str(i)],
+                                            gc[str(i)], h, positions)
+        return h, new_c
+
+    new_groups_cache = None
+    if groups_p is not None:
+        x, new_groups_cache = jax.lax.scan(
+            group_fn, x, (groups_p, groups_ad, groups_cache))
+    q, _, rem = cfg.stack_plan()
+    new_tail = []
+    for i, kind in enumerate(rem):
+        x, c = block_decode(cfg, kind, tail_p[i], tail_ad[i], tail_cache[i],
+                            x, positions)
+        new_tail.append(c)
+    return x, new_groups_cache, tuple(new_tail)

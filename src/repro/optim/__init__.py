@@ -1,0 +1,2 @@
+from repro.optim.adamw import Optimizer, adamw, apply_updates, global_norm, sgd  # noqa: F401
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,99 @@
+"""AdamW + SGD in pure JAX (optax is not available offline).
+
+API mirrors the optax gradient-transformation convention:
+
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _lr_at(lr: LR, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr: LR = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "mu": zeros,
+                "nu": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        lr_t = _lr_at(lr, step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: LR = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"step": jnp.zeros((), jnp.int32),
+                    "mom": jax.tree.map(
+                        lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            updates = jax.tree.map(
+                lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree.map(
+            lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

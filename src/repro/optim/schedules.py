@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(peak: float, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return sched

@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py (a separate process) requests 512 placeholder devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        rope_theta=1e4, layer_pattern=("attn",), param_dtype="float32",
+        lora_rank=4)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_batch(cfg: ModelConfig, b: int = 2, s: int = 16, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks),
+             "labels": jnp.asarray(np.roll(toks, -1, axis=1))}
+    if cfg.pos_type == "mrope":
+        p = cfg.vision_patches
+        pos = np.broadcast_to(np.arange(s + p, dtype=np.int32)[None, :, None],
+                              (b, s + p, 3)).copy()
+        batch["positions"] = jnp.asarray(pos)
+        batch["vision"] = jnp.asarray(
+            rng.standard_normal((b, p, cfg.d_model)).astype(np.float32))
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_frames, cfg.d_model))
+            .astype(np.float32))
+    return batch

@@ -1,0 +1,73 @@
+"""Aggregation (paper eqn 3) + FedAvg unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+
+
+def test_personalized_weights_simplex_and_no_self():
+    s = jnp.asarray(np.random.default_rng(0).random((5, 5)))
+    w = np.asarray(aggregation.personalized_weights(s))
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    assert np.all(np.diag(w) == 0.0)          # eqn (3): j ≠ i
+    assert np.all(w >= 0)
+
+
+def test_personalized_weights_prefer_similar():
+    s = jnp.asarray([[0., 10., 1.],
+                     [10., 0., 1.],
+                     [1., 1., 0.]])
+    w = np.asarray(aggregation.personalized_weights(s))
+    assert w[0, 1] > w[0, 2]
+    assert w[2, 0] == w[2, 1]
+
+
+def test_self_weight_extension():
+    s = jnp.ones((3, 3))
+    w = np.asarray(aggregation.personalized_weights(s, self_weight=0.3))
+    np.testing.assert_allclose(np.diag(w), 0.3, atol=1e-6)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+
+
+def test_aggregate_payloads_mixes_correctly():
+    payloads = [{"c": jnp.full((2, 2), float(i))} for i in range(3)]
+    w = jnp.asarray([[0., 1., 0.], [0.5, 0., 0.5], [0., 0., 1.]])
+    out = aggregation.aggregate_payloads(payloads, w)
+    assert float(out[0]["c"][0, 0]) == 1.0
+    assert float(out[1]["c"][0, 0]) == 1.0     # 0.5·0 + 0.5·2
+    assert float(out[2]["c"][0, 0]) == 2.0
+
+
+def test_fedavg_sample_weighting():
+    payloads = [{"c": jnp.zeros((2,))}, {"c": jnp.ones((2,))}]
+    g = aggregation.fedavg(payloads, [1, 3])
+    np.testing.assert_allclose(np.asarray(g["c"]), 0.75, atol=1e-6)
+
+
+def test_hierarchical_weights_simplex_and_tiers():
+    import numpy as np
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.random((6, 6)) + 0.1)
+    edges = jnp.asarray([0, 0, 0, 1, 1, 2])
+    w = np.asarray(aggregation.hierarchical_weights(s, edges,
+                                                    intra_frac=0.7))
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+    assert np.all(np.diag(w) == 0.0)
+    # intra-edge mass ≈ 0.7 for clients with edge peers
+    same = np.asarray(edges)[:, None] == np.asarray(edges)[None, :]
+    intra_mass = (w * same).sum(1)
+    np.testing.assert_allclose(intra_mass[:5], 0.7, atol=1e-5)
+    # the singleton edge (client 5) falls back to the cloud tier entirely
+    assert abs(intra_mass[5]) < 1e-6
+
+
+def test_hierarchical_weights_drop_in_compatible():
+    s = jnp.ones((4, 4))
+    edges = jnp.asarray([0, 0, 1, 1])
+    w = aggregation.hierarchical_weights(s, edges)
+    payloads = [{"c": jnp.full((2, 2), float(i))} for i in range(4)]
+    outs = aggregation.aggregate_payloads(payloads, w)
+    assert len(outs) == 4
+    import numpy as np
+    assert np.isfinite(np.asarray(outs[0]["c"])).all()

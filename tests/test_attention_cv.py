@@ -1,0 +1,59 @@
+"""Custom-VJP blockwise attention vs autodiff of the reference SDPA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import sdpa
+from repro.models.attention_cv import blockwise_sdpa_cv
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("sq,window", [(128, 0), (128, 48), (64, 0)])
+def test_cv_forward_and_grads_match_reference(sq, window):
+    b, h, kh, hd = 2, 4, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.float32)
+    ct = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.float32)
+
+    out_cv = blockwise_sdpa_cv(q, k, v, True, window, 32, 32)
+    out_ref = sdpa(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out_cv), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-4)
+
+    def f_cv(q, k, v):
+        return jnp.sum(blockwise_sdpa_cv(q, k, v, True, window, 32, 32) * ct)
+
+    def f_ref(q, k, v):
+        return jnp.sum(sdpa(q, k, v, causal=True, window=window) * ct)
+
+    g_cv = jax.grad(f_cv, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_cv, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_cv_bf16_accumulation_close():
+    """bf16 inputs: dK/dV accumulated in bf16 stay within bf16 tolerance."""
+    b, sq, h, kh, hd = 1, 64, 2, 1, 16
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), jnp.bfloat16)
+
+    def f_cv(q, k, v):
+        return jnp.sum(blockwise_sdpa_cv(q, k, v, True, 0, 32, 32)
+                       .astype(jnp.float32))
+
+    def f_ref(q, k, v):
+        return jnp.sum(sdpa(q, k, v, causal=True).astype(jnp.float32))
+
+    g_cv = jax.grad(f_cv, argnums=(1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(1, 2))(q, k, v)
+    for a, b_ in zip(g_cv, g_ref):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=6e-2, atol=6e-2)

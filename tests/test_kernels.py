@@ -1,0 +1,152 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.rwkv6 import wkv6, wkv6_ref
+from repro.kernels.tri_lora import tri_lora_matmul, tri_lora_matmul_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tri_lora
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r", [(64, 64, 64, 4), (96, 160, 130, 8),
+                                     (32, 256, 64, 16), (128, 64, 192, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tri_lora_kernel(m, k, n, r, dtype):
+    x = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    w = jnp.asarray(RNG.standard_normal((k, n)) * 0.05, dtype)
+    a = jnp.asarray(RNG.standard_normal((k, r)) * 0.2, dtype)
+    c = jnp.asarray(RNG.standard_normal((r, r)) * 0.2, dtype)
+    b = jnp.asarray(RNG.standard_normal((r, n)) * 0.2, dtype)
+    out = tri_lora_matmul(x, w, a, c, b, 2.0, bm=32, bn=64, bk=32,
+                          interpret=True)
+    ref = tri_lora_matmul_ref(x, w, a, c, b, 2.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_tri_lora_kernel_batched_input():
+    x = jnp.asarray(RNG.standard_normal((2, 17, 64)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((64, 96)) * 0.1, jnp.float32)
+    a = jnp.asarray(RNG.standard_normal((64, 8)) * 0.2, jnp.float32)
+    c = jnp.eye(8)
+    b = jnp.asarray(RNG.standard_normal((8, 96)) * 0.2, jnp.float32)
+    out = tri_lora_matmul(x, w, a, c, b, 1.0, bm=32, bn=32, bk=32,
+                          interpret=True)
+    ref = tri_lora_matmul_ref(x.reshape(-1, 64), w, a, c, b, 1.0)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 96),
+                               np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,h,kh,hd,window", [
+    (128, 4, 2, 32, 0),       # GQA causal
+    (128, 4, 4, 32, 0),       # MHA
+    (128, 4, 1, 32, 48),      # MQA + sliding window
+    (96, 8, 2, 64, 0),        # non-multiple seq (pads)
+    (256, 4, 2, 32, 96),      # window spanning blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(sq, h, kh, hd, window, dtype):
+    b = 2
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=32, bk=32,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,h,hd,chunk", [(64, 2, 16, 16), (80, 2, 16, 32),
+                                          (33, 1, 8, 32), (128, 4, 32, 32)])
+def test_wkv6_kernel(t, h, hd, chunk):
+    b = 2
+    r = jnp.asarray(RNG.standard_normal((b, t, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, t, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, t, h, hd)), jnp.float32)
+    w = jax.nn.sigmoid(jnp.asarray(RNG.standard_normal((b, t, h, hd)) * 2,
+                                   jnp.float32))
+    u = jnp.asarray(RNG.standard_normal((h, hd)) * 0.5, jnp.float32)
+    s0 = jnp.asarray(RNG.standard_normal((b, h, hd, hd)) * 0.1, jnp.float32)
+    y, s1 = wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_kernel_extreme_decay():
+    """Aggressive decay (w→0) must not overflow (log-space formulation)."""
+    b, t, h, hd = 1, 64, 1, 8
+    r = jnp.ones((b, t, h, hd)) * 0.5
+    k = jnp.ones((b, t, h, hd)) * 0.5
+    v = jnp.ones((b, t, h, hd))
+    w = jnp.full((b, t, h, hd), 1e-6)          # near-total forgetting
+    u = jnp.zeros((h, hd))
+    s0 = jnp.zeros((b, h, hd, hd))
+    y, s1 = wkv6(r, k, v, w, u, s0, chunk=16, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, w, u, s0)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(s1)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (flash-decoding, ring cache)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.decode_attention import (  # noqa: E402
+    decode_attention, decode_attention_ref)
+
+
+@pytest.mark.parametrize("ring,h,kh,hd,idx", [
+    (64, 4, 2, 32, 10),       # partially-filled ring
+    (64, 4, 2, 32, 200),      # wrapped ring (all slots valid)
+    (96, 4, 1, 32, 95),       # MQA, non-pow2 ring (pads to bk)
+    (64, 4, 4, 16, 63),       # MHA, exactly full
+])
+def test_decode_attention_kernel(ring, h, kh, hd, idx):
+    b = 2
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), jnp.float32)
+    out = decode_attention(q, k, v, jnp.asarray(idx, jnp.int32), bk=32,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, jnp.asarray(idx, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_kernel_bf16():
+    b, ring, h, kh, hd = 2, 64, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, hd)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), jnp.bfloat16)
+    out = decode_attention(q, k, v, jnp.asarray(30, jnp.int32), bk=32,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, jnp.asarray(30, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,87 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, tri_lora
+from repro.core.similarity import ot
+from repro.models.attention import blockwise_sdpa, sdpa
+
+jax.config.update("jax_platform_name", "cpu")
+
+_floats = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_personalized_weights_always_simplex(m, seed):
+    """Row-stochastic, non-negative, zero self-weight — for ANY affinity."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.random((m, m)) * rng.integers(1, 100))
+    w = np.asarray(aggregation.personalized_weights(s))
+    assert np.all(w >= -1e-9)
+    assert np.all(np.abs(np.diag(w)) < 1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(0, 99))
+def test_sinkhorn_plan_is_valid_transport(n, m, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) + 0.1
+    a /= a.sum()
+    b = rng.random(m) + 0.1
+    b /= b.sum()
+    cost = jnp.asarray(rng.random((n, m)), jnp.float32)
+    plan = np.asarray(ot.sinkhorn(jnp.asarray(a, jnp.float32),
+                                  jnp.asarray(b, jnp.float32), cost,
+                                  eps=0.1, n_iters=300))
+    assert np.all(plan >= -1e-8)
+    np.testing.assert_allclose(plan.sum(1), a, atol=2e-3)
+    np.testing.assert_allclose(plan.sum(0), b, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 32), st.integers(4, 32), st.integers(1, 8),
+       st.integers(0, 99))
+def test_tri_lora_merge_equivalence(d, k, r, seed):
+    """x·merge(W, adapter) == x·W + lowrank(x) for random factors."""
+    keys = jax.random.split(jax.random.key(seed), 5)
+    a = {"A": jax.random.normal(keys[0], (d, r)) * 0.3,
+         "C": jax.random.normal(keys[1], (r, r)) * 0.3,
+         "B": jax.random.normal(keys[2], (r, k)) * 0.3}
+    w = jax.random.normal(keys[3], (d, k)) * 0.2
+    x = jax.random.normal(keys[4], (3, d))
+    lhs = x @ tri_lora.merge(w, a, 1.7)
+    rhs = x @ w + tri_lora.apply_tri_lora(x, a, 1.7)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([16, 32, 48, 64]), st.sampled_from([0, 16, 24]),
+       st.integers(0, 99))
+def test_blockwise_attention_matches_reference(sq, window, seed):
+    rng = np.random.default_rng(seed)
+    b, h, kh, hd = 1, 2, 1, 8
+    q = jnp.asarray(rng.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, kh, hd)), jnp.float32)
+    ref = sdpa(q, k, v, causal=True, window=window)
+    out = blockwise_sdpa(q, k, v, causal=True, window=window, bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 99))
+def test_fedavg_preserves_convex_hull(m, seed):
+    rng = np.random.default_rng(seed)
+    payloads = [{"c": jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)}
+                for _ in range(m)]
+    counts = rng.integers(1, 50, m).tolist()
+    g = np.asarray(aggregation.fedavg(payloads, counts)["c"])
+    stack = np.stack([np.asarray(p["c"]) for p in payloads])
+    assert np.all(g <= stack.max(0) + 1e-5)
+    assert np.all(g >= stack.min(0) - 1e-5)

@@ -1,0 +1,94 @@
+"""Sharding-rule unit tests on ABSTRACT meshes (no devices needed):
+every param/cache/batch leaf must get a PartitionSpec whose sharded dims
+divide the mesh axis, tri-LoRA C must be replicated (it is the federated
+payload), and the serving layout must drop the FSDP axis."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.launch.steps import SHAPES, abstract_cache, input_specs, shape_variant
+from repro.models import model
+from repro.models.config import get_config
+
+MESHES = {
+    "16x16": AbstractMesh((16, 16), ("data", "model")),
+    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def _check_divisible(spec_tree, shape_tree, mesh):
+    flat_s = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_x = jax.tree.leaves(shape_tree)
+    assert len(flat_s) == len(flat_x)
+    for spec, leaf in zip(flat_s, flat_x):
+        assert isinstance(spec, P), spec
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            assert dim % total == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divisible_everywhere(arch, mesh_name):
+    mesh = MESHES[mesh_name]
+    cfg = get_config(arch)
+    params = model.abstract_params(cfg)
+    specs = shd.param_specs(params, mesh, cfg)
+    _check_divisible(specs, params, mesh)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_c_matrices_replicated(arch):
+    mesh = MESHES["16x16"]
+    cfg = get_config(arch)
+    adapter = model.abstract_params(cfg)["adapter"]
+    specs = shd.param_specs(adapter, mesh, cfg)
+
+    def check(path, spec):
+        names = shd._path_names(path)
+        if names[-1] == "C":
+            assert all(s is None for s in spec), (names, spec)
+    jax.tree.map_with_path(check, specs)
+
+
+def test_serving_layout_drops_fsdp():
+    mesh = MESHES["16x16"]
+    cfg = get_config("qwen3-32b")
+    base = model.abstract_params(cfg)["base"]
+    fsdp = shd.param_specs(base, mesh, cfg, fsdp=True)
+    serve = shd.param_specs(base, mesh, cfg, fsdp=False)
+    def count_axis(tree, axis):
+        n = 0
+        for spec in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)):
+            for s in spec:
+                axes = s if isinstance(s, tuple) else (s,)
+                n += axis in axes
+        return n
+    assert count_axis(fsdp, "data") > 0
+    assert count_axis(serve, "data") == 0          # no FSDP gathers
+    assert count_axis(serve, "model") == count_axis(fsdp, "model")
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "rwkv6-1.6b",
+                                  "whisper-small", "recurrentgemma-2b"])
+def test_batch_and_cache_specs(arch, shape_name):
+    mesh = MESHES["2x16x16"]
+    cfg = shape_variant(get_config(arch), shape_name)
+    baxes = batch_axes(mesh) if hasattr(mesh, "axis_names") else ()
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch = input_specs(cfg, shape_name)
+    bspecs = shd.batch_specs(batch, mesh, baxes)
+    _check_divisible(bspecs, batch, mesh)
+    if SHAPES[shape_name].kind == "decode":
+        cache = abstract_cache(cfg, shape_name)
+        cspecs = shd.cache_specs(cache, mesh, cfg, baxes)
+        _check_divisible(cspecs, cache, mesh)

@@ -1,0 +1,95 @@
+"""Unit tests for the similarity stack: GMM/EM, Sinkhorn OT, MW2, CKA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.similarity import cka, gmm, ot
+
+
+def test_gmm_recovers_two_clusters():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([rng.normal(-3, 0.3, (200, 4)),
+                        rng.normal(+3, 0.3, (200, 4))])
+    fit = gmm.fit_gmm(jax.random.key(0), jnp.asarray(x, jnp.float32), 2)
+    mus = np.sort(np.asarray(fit.means)[:, 0])
+    assert abs(mus[0] + 3) < 0.5 and abs(mus[1] - 3) < 0.5
+    np.testing.assert_allclose(np.asarray(fit.weights).sum(), 1.0, rtol=1e-4)
+
+
+def test_gaussian_w2_zero_for_identical():
+    mu = jnp.ones((4,))
+    var = jnp.full((4,), 0.5)
+    assert float(gmm.gaussian_w2_sq(mu, var, mu, var)) == 0.0
+    d = float(gmm.gaussian_w2_sq(mu, var, mu + 2.0, var))
+    assert abs(d - 4 * 4.0) < 1e-5                 # |Δμ|² = 4 dims × 2²
+
+
+def test_sinkhorn_marginals():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray([0.3, 0.7])
+    b = jnp.asarray([0.2, 0.5, 0.3])
+    cost = jnp.asarray(rng.random((2, 3)), jnp.float32)
+    plan = ot.sinkhorn(a, b, cost, eps=0.05, n_iters=500)
+    np.testing.assert_allclose(np.asarray(plan.sum(1)), np.asarray(a),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(plan.sum(0)), np.asarray(b),
+                               atol=1e-3)
+
+
+def test_mw2_separates_near_and_far():
+    def mk(center):
+        return gmm.GMM(jnp.asarray([0.5, 0.5]),
+                       jnp.asarray([[center, 0.], [center, 1.]]),
+                       jnp.full((2, 2), 0.1))
+    base = mk(0.0)
+    near = mk(0.5)
+    far = mk(5.0)
+    assert float(ot.mw2(base, near)) < float(ot.mw2(base, far))
+    assert float(ot.mw2(base, base)) < 1e-3
+
+
+def test_dataset_distance_symmetry_and_identity():
+    rng = np.random.default_rng(2)
+    def mkset(shift):
+        w = jnp.asarray(np.full((3, 2), 0.5), jnp.float32)
+        mu = jnp.asarray(rng.normal(shift, 1, (3, 2, 4)), jnp.float32)
+        var = jnp.asarray(np.full((3, 2, 4), 0.2), jnp.float32)
+        return gmm.GMM(w, mu, var)
+    ga, gb = mkset(0.0), mkset(3.0)
+    ca = jnp.asarray([10., 20., 30.])
+    d_ab = float(ot.dataset_distance(ga, ca, gb, ca))
+    d_ba = float(ot.dataset_distance(gb, ca, ga, ca))
+    d_aa = float(ot.dataset_distance(ga, ca, ga, ca))
+    assert abs(d_ab - d_ba) / max(d_ab, 1e-9) < 0.05
+    assert d_aa < d_ab
+
+
+def test_affinity_monotone_decreasing_in_distance():
+    dist = jnp.asarray([[0., 1., 4.], [1., 0., 2.], [4., 2., 0.]])
+    aff = np.asarray(ot.distance_to_affinity(dist))
+    assert aff[0, 1] > aff[0, 2]
+    assert np.all(aff <= 1.0 + 1e-6)
+
+
+def test_cka_properties():
+    key = jax.random.key(0)
+    probes = jax.random.normal(key, (32, 8))
+    c1 = jax.random.normal(jax.random.key(1), (8, 8))
+    c2 = jax.random.normal(jax.random.key(2), (8, 8))
+    # self-similarity = 1
+    assert abs(float(cka.cka(c1, c1, probes)) - 1.0) < 1e-5
+    # invariant to orthogonal transforms and isotropic scaling
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.key(3), (8, 8)))
+    assert abs(float(cka.cka(c1, c1 @ q * 3.0, probes)) - 1.0) < 1e-4
+    v12 = float(cka.cka(c1, c2, probes))
+    assert 0.0 <= v12 <= 1.0
+
+
+def test_pairwise_model_similarity_shape():
+    trees = [{"m1": jax.random.normal(jax.random.key(i), (2, 4, 4)),
+              "m2": jax.random.normal(jax.random.key(i + 10), (4, 4))}
+             for i in range(3)]
+    s = cka.pairwise_model_similarity(trees, jax.random.key(99), 16)
+    assert s.shape == (3, 3)
+    assert np.allclose(np.diag(np.asarray(s)), 1.0, atol=1e-4)

@@ -1,0 +1,83 @@
+"""Launch-layer step-function tests (single CPU device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import steps as st
+from repro.models import model
+from repro.models.config import get_config
+
+from conftest import make_batch
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("fed-100m").reduced()
+    params = model.init_params(cfg, jax.random.key(0))
+    opt_batch = make_batch(cfg, b=8, s=32)
+    return cfg, params, opt_batch
+
+
+def test_microbatch_grad_accumulation_matches_full_batch(small):
+    """k-microbatch gradient accumulation == full-batch step (same update)."""
+    cfg, params, batch = small
+    s1 = st.make_train_step(cfg, lr=1e-3, microbatches=1)
+    s4 = st.make_train_step(cfg, lr=1e-3, microbatches=4)
+    o1 = s1.optimizer.init(params["adapter"])
+    o4 = s4.optimizer.init(params["adapter"])
+    p1, _, m1 = jax.jit(s1)(params, o1, batch)
+    p4, _, m4 = jax.jit(s4)(params, o4, batch)
+    # losses: full-batch CE vs mean of per-microbatch CEs (equal token
+    # counts per microbatch → identical)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1["adapter"]),
+                    jax.tree.leaves(p4["adapter"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_step_last_logits(small):
+    cfg, params, batch = small
+    pf = st.make_prefill_step(cfg)
+    logits = jax.jit(pf)(params, {k: v for k, v in batch.items()
+                                  if k != "labels"})
+    assert logits.shape == (8, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+
+
+def test_serve_step_roundtrip(small):
+    cfg, params, _ = small
+    serve = st.make_serve_step(cfg)
+    cache = model.init_decode_cache(cfg, 2, 16)
+    batch = {"token": jnp.ones((2, 1), jnp.int32),
+             "positions": jnp.zeros((2, 1), jnp.int32)}
+    logits, cache2 = jax.jit(serve)(params, cache, batch)
+    assert logits.shape == (2, cfg.padded_vocab)
+    # cache advanced
+    q, pattern, _ = cfg.stack_plan()
+    idx = jax.tree.leaves({k: v for k, v in cache2.items()})
+    assert int(cache2["groups"]["0"]["idx"][0]) == 1
+
+
+def test_shape_variant_long500k():
+    cfg = get_config("qwen2.5-14b")
+    v = st.shape_variant(cfg, "long_500k")
+    assert v.layer_pattern == ("swa",)
+    assert v.window == st.SWA_VARIANT_WINDOW
+    # natively sub-quadratic archs unchanged
+    r = st.shape_variant(get_config("rwkv6-1.6b"), "long_500k")
+    assert r.layer_pattern == ("rwkv6",)
+
+
+def test_input_specs_cover_all_modalities():
+    for arch in ("qwen2-vl-72b", "whisper-small", "qwen2.5-14b"):
+        cfg = get_config(arch)
+        for shape in st.SHAPES:
+            spec = st.input_specs(cfg, shape)
+            assert all(hasattr(v, "shape") for v in spec.values())
+    vlm = st.input_specs(get_config("qwen2-vl-72b"), "train_4k")
+    assert "vision" in vlm and vlm["positions"].shape[-1] == 3
+    aud = st.input_specs(get_config("whisper-small"), "prefill_32k")
+    assert "frames" in aud and aud["frames"].shape[1] == 1500

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the CE-LoRA system (paper Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 800, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 400, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+def _run(fed_setup, method, rounds=3, **kw):
+    task, ctrain, ctest, m = fed_setup
+    fed = FedConfig(method=method, n_clients=m, rounds=rounds, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+def test_celora_round_trip(fed_setup):
+    out = _run(fed_setup, "celora")
+    assert len(out["history"]) == 3
+    assert np.isfinite(out["history"][-1].train_loss)
+    assert out["history"][-1].train_loss < out["history"][0].train_loss
+
+
+def test_celora_uplink_is_c_only(fed_setup):
+    task, *_ = fed_setup
+    out = _run(fed_setup, "celora", rounds=1)
+    out_fp = _run(fed_setup, "fedpetuning", rounds=1)
+    r = task.cfg.lora_rank
+    assert out["uplink_floats_per_round"] % (r * r) == 0
+    assert out["uplink_floats_per_round"] < out_fp["uplink_floats_per_round"] / 10
+
+
+def test_personalization_keeps_clients_distinct(fed_setup):
+    """Unlike FedAvg, personalized aggregation leaves per-client C̄ distinct."""
+    out = _run(fed_setup, "celora", rounds=2)
+    from repro.core import tri_lora
+    cs = [jax.tree.leaves(tri_lora.tree_payload(s["adapter"]))[0]
+          for s in out["states"]]
+    assert not np.allclose(np.asarray(cs[0]), np.asarray(cs[1]))
+
+    out_avg = _run(fed_setup, "celora_fedavg", rounds=2)
+    cs_avg = [jax.tree.leaves(tri_lora.tree_payload(s["adapter"]))[0]
+              for s in out_avg["states"]]
+    np.testing.assert_allclose(np.asarray(cs_avg[0]), np.asarray(cs_avg[1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lora_loc_never_communicates(fed_setup):
+    out = _run(fed_setup, "lora_loc", rounds=2)
+    assert out["uplink_floats_per_round"] == 0
+
+
+def test_ffa_freezes_a(fed_setup):
+    """FFA-LoRA must leave A at its init across training."""
+    task, ctrain, ctest, m = fed_setup
+    key = jax.random.split(jax.random.key(0), m)[0]
+    init_state = task.init_client(key)
+    out = _run(fed_setup, "ffa_lora", rounds=2)
+    from repro.core import tri_lora
+    a_init = jax.tree.leaves(init_state["adapter"],
+                             is_leaf=tri_lora.is_adapter)[0]["A"]
+    a_after = jax.tree.leaves(out["states"][0]["adapter"],
+                              is_leaf=tri_lora.is_adapter)[0]["A"]
+    np.testing.assert_array_equal(np.asarray(a_init), np.asarray(a_after))
+
+
+def test_all_strategies_run_one_round(fed_setup):
+    from repro.core.baselines import STRATEGIES
+    for name in STRATEGIES:
+        out = _run(fed_setup, name, rounds=1)
+        assert np.isfinite(out["history"][0].train_loss), name

@@ -1,0 +1,96 @@
+"""Unit tests for the tri-matrix factorization (paper §III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tri_lora
+
+
+def _adapter(key, d, k, r, dtype=jnp.float32):
+    a = tri_lora.init_adapter(key, d, k, r, dtype)
+    # randomize B and C so the delta is non-zero
+    k1, k2 = jax.random.split(key)
+    a["B"] = jax.random.normal(k1, a["B"].shape, dtype) * 0.2
+    a["C"] = a["C"] + jax.random.normal(k2, a["C"].shape, dtype) * 0.1
+    return a
+
+
+def test_init_is_zero_delta():
+    a = tri_lora.init_adapter(jax.random.key(0), 32, 48, 8)
+    assert float(jnp.max(jnp.abs(tri_lora.adapter_delta(a, 2.0)))) == 0.0
+
+
+def test_identity_c_matches_vanilla_lora():
+    """With C = I, tri-LoRA must equal vanilla LoRA (strict generalization)."""
+    key = jax.random.key(1)
+    a = _adapter(key, 32, 48, 8)
+    a["C"] = jnp.eye(8)
+    x = jax.random.normal(jax.random.key(2), (5, 32))
+    tri = tri_lora.apply_tri_lora(x, a, 2.0)
+    vanilla = 2.0 * (x @ a["A"]) @ a["B"]
+    np.testing.assert_allclose(np.asarray(tri), np.asarray(vanilla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_merge_equals_apply():
+    """Paper eqn (10): inference with merged W equals base + low-rank path."""
+    key = jax.random.key(3)
+    a = _adapter(key, 16, 24, 4)
+    w = jax.random.normal(jax.random.key(4), (16, 24)) * 0.1
+    x = jax.random.normal(jax.random.key(5), (7, 16))
+    merged = tri_lora.merge(w, a, 2.0)
+    np.testing.assert_allclose(
+        np.asarray(x @ merged),
+        np.asarray(x @ w + tri_lora.apply_tri_lora(x, a, 2.0)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_payload_is_c_only():
+    a = _adapter(jax.random.key(6), 64, 64, 8)
+    tree = {"layer0": {"wq": a, "wv": dict(a)}}
+    payload = tri_lora.tree_payload(tree)
+    leaves = jax.tree.leaves(payload)
+    assert len(leaves) == 2
+    assert all(l.shape == (8, 8) for l in leaves)
+    assert tri_lora.payload_num_params(tree) == 2 * 64     # 2 modules × r²
+    assert tri_lora.full_lora_num_params(tree) == 2 * (64 * 8 + 8 * 64)
+
+
+def test_payload_roundtrip():
+    a = _adapter(jax.random.key(7), 16, 16, 4)
+    tree = {"m": a}
+    c_new = jax.tree.map(lambda c: c * 3.0, tri_lora.tree_payload(tree))
+    tree2 = tri_lora.tree_load_payload(tree, c_new)
+    np.testing.assert_allclose(np.asarray(tree2["m"]["C"]),
+                               np.asarray(a["C"] * 3.0), rtol=1e-6)
+    # A and B untouched
+    np.testing.assert_array_equal(np.asarray(tree2["m"]["A"]),
+                                  np.asarray(a["A"]))
+
+
+def test_combine_adapters_is_sum():
+    """FDLoRA block-diagonal combination: apply(combined) = apply(a1)+apply(a2)."""
+    k = jax.random.key(8)
+    a1 = _adapter(jax.random.key(9), 20, 30, 4)
+    a2 = _adapter(jax.random.key(10), 20, 30, 6)
+    x = jax.random.normal(k, (5, 20))
+    comb = tri_lora.combine_adapters(a1, a2)
+    assert comb["C"].shape == (10, 10)
+    got = tri_lora.apply_tri_lora(x, comb, 1.5)
+    want = tri_lora.apply_tri_lora(x, a1, 1.5) + tri_lora.apply_tri_lora(x, a2, 1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_communication_reduction_ratio():
+    """Paper Table III: LLaMA-7B q,v adapters, r=8 → 1024× reduction."""
+    d = 4096
+    r = 8
+    tree = {f"l{i}": {t: tri_lora.init_adapter(jax.random.key(i), d, d, r)
+                      for t in ("wq", "wv")} for i in range(32)}
+    full = tri_lora.full_lora_num_params(tree)   # FedPETuning payload
+    ours = tri_lora.payload_num_params(tree)     # CE-LoRA payload
+    assert full == 32 * 2 * (d * r + r * d) == 4_194_304
+    assert ours == 32 * 2 * r * r == 4_096
+    assert full // ours == 1024
