@@ -1,0 +1,65 @@
+"""Round wall-clock vs n_clients for the loop vs vmap client dispatch
+(the Fig. 8 scaling axis, measured on dispatch overhead rather than
+accuracy).
+
+The reference ``client_parallelism="loop"`` path issues one jitted
+local-fit + one eval per client per round, so round time grows linearly in
+m even when each client's compute is tiny.  The vectorized ``"vmap"`` path
+runs all clients as one batched program — round time should grow
+sub-linearly (roughly flat until the batched program saturates the
+machine).
+
+Usage:  PYTHONPATH=src python benchmarks/fed_scale.py [--quick]
+
+Prints CSV: n_clients,mode,round_s,speedup_vs_loop — round_s is the mean
+steady-state round wall-clock (compile excluded by a warmup round).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import make_clients, make_task  # noqa: E402
+
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+
+COUNTS = [5, 10, 20, 50]
+MODES = ["loop", "vmap"]
+
+
+def time_rounds(mode: str, m: int, rounds: int = 3,
+                local_steps: int = 4) -> float:
+    task = make_task()
+    ctrain, ctest = make_clients(m, n_train=60 * m, n_test=64 * m)
+    fed = FedConfig(method="celora_fedavg", n_clients=m,
+                    rounds=rounds + 1, local_steps=local_steps, batch_size=8,
+                    lr=1e-2, client_parallelism=mode)
+    out = run_federated(task, fed, ctrain, ctest)
+    # round 0 pays XLA compilation; average the steady-state rounds
+    return sum(r.wall_s for r in out["history"][1:]) / rounds
+
+
+def main(quick: bool = False) -> dict:
+    counts = [5, 10] if quick else COUNTS
+    print("# fed_scale — round wall-clock vs client count")
+    print("n_clients,mode,round_s,speedup_vs_loop")
+    results = {}
+    for m in counts:
+        base = None
+        for mode in MODES:
+            t = time_rounds(mode, m)
+            results[(m, mode)] = t
+            base = t if mode == "loop" else base
+            print(f"{m},{mode},{t:.3f},{base / t:.2f}")
+    # sub-linearity check: vmap round time from smallest -> largest m should
+    # grow by far less than m does
+    lo, hi = counts[0], counts[-1]
+    growth = results[(hi, 'vmap')] / max(results[(lo, 'vmap')], 1e-9)
+    print(f"# vmap round-time growth {lo}->{hi} clients: {growth:.2f}x "
+          f"(client growth {hi / lo:.1f}x)")
+    return results
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

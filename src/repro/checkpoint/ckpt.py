@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 def _flatten(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = compat.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -55,7 +57,7 @@ def restore(path: str, like: Any) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated)."""
     with np.load(path) as data:
         dtypes = json.loads(bytes(data["__dtypes__"]).decode())
-        flat_like, treedef = jax.tree.flatten_with_path(like)
+        flat_like, treedef = compat.tree_flatten_with_path(like)
         leaves = []
         for pth, leaf in flat_like:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

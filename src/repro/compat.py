@@ -1,0 +1,18 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase is written against the current `jax.tree.*` / ambient-mesh
+API; this module backfills the handful of names that moved between
+jax 0.4.x and 0.5+ so the repo runs on both.  Keep every cross-version
+access here — callers should never probe `hasattr(jax, ...)` themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.tree_util as jtu
+
+# jax.tree.map_with_path / flatten_with_path landed after 0.4.37; the
+# jax.tree_util spellings exist on every version we support.
+tree_map_with_path = getattr(jax.tree, "map_with_path",
+                             jtu.tree_map_with_path)
+tree_flatten_with_path = getattr(jax.tree, "flatten_with_path",
+                                 jtu.tree_flatten_with_path)

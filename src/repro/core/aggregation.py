@@ -5,8 +5,19 @@ from the combined affinity S = S^data + S^model, self excluded.  A
 ``self_weight`` λ extends the paper (beyond-paper knob, default 0 = faithful):
 C̄_i = λ·C_i + (1-λ)·Σ_{j≠i} w_ij C_j.
 
-``aggregate_payloads`` applies the weights to any pytree-of-C payloads;
-``fedavg`` is the FedPETuning baseline (sample-count weighted mean).
+Payload layouts — every aggregator exists in two equivalent forms:
+
+* list form (reference / ``client_parallelism="loop"``): a Python list of m
+  identical pytrees, one per client, as produced by per-client uplinks;
+* stacked form (``"vmap"`` / ``"shard"``): ONE pytree whose leaves carry a
+  leading client axis (m, …) — see :mod:`repro.core.client_batch`.  The
+  stacked aggregators are single fused einsums over the client axis, so the
+  server does O(1) dispatches regardless of m.
+
+``aggregate_payloads`` / ``aggregate_stacked`` apply eqn (3) weights to the
+C payloads (out_i = Σ_j W[i,j]·C_j); ``fedavg`` / ``fedavg_stacked`` are the
+FedPETuning baseline (sample-count weighted mean, one global result).  The
+list forms stack internally and delegate to the stacked forms.
 """
 from __future__ import annotations
 
@@ -32,24 +43,36 @@ def personalized_weights(similarity: jnp.ndarray,
     return w
 
 
-def aggregate_payloads(payloads: Sequence[Any], weights: jnp.ndarray) -> list:
-    """payloads: list (len m) of identical-structure pytrees (the C trees).
-    Returns list of per-client aggregated pytrees: out_i = Σ_j W[i,j]·p_j."""
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)   # (m, …)
+def aggregate_stacked(stacked: Any, weights: jnp.ndarray) -> Any:
+    """Eqn (3) mixing over a STACKED payload: leaves (m, …) → (m, …) with
+    out[i] = Σ_j W[i,j]·leaf[j].  One einsum per leaf — no per-client work."""
     def agg(leaf):
         return jnp.einsum("ij,j...->i...", weights.astype(leaf.dtype), leaf)
-    mixed = jax.tree.map(agg, stacked)
+    return jax.tree.map(agg, stacked)
+
+
+def aggregate_payloads(payloads: Sequence[Any], weights: jnp.ndarray) -> list:
+    """List-form wrapper of :func:`aggregate_stacked`: list of m pytrees in,
+    list of m per-client aggregated pytrees out (out_i = Σ_j W[i,j]·p_j)."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)   # (m, …)
+    mixed = aggregate_stacked(stacked, weights)
     m = weights.shape[0]
     return [jax.tree.map(lambda l, i=i: l[i], mixed) for i in range(m)]
 
 
-def fedavg(payloads: Sequence[Any], sample_counts: Sequence[int]) -> Any:
-    """FedPETuning-style sample-weighted average; returns ONE global pytree."""
+def fedavg_stacked(stacked: Any, sample_counts: Sequence[int]) -> Any:
+    """FedAvg over a STACKED payload: leaves (m, …) → ONE global pytree
+    (sample-count weighted mean over the client axis)."""
     n = jnp.asarray(sample_counts, jnp.float32)
     w = n / jnp.sum(n)
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
     return jax.tree.map(
         lambda l: jnp.einsum("j,j...->...", w.astype(l.dtype), l), stacked)
+
+
+def fedavg(payloads: Sequence[Any], sample_counts: Sequence[int]) -> Any:
+    """FedPETuning-style sample-weighted average; returns ONE global pytree."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    return fedavg_stacked(stacked, sample_counts)
 
 
 def hierarchical_weights(similarity: jnp.ndarray, edge_of: jnp.ndarray,

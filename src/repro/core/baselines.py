@@ -10,6 +10,16 @@ Each strategy is a small object describing
 All strategies share the same client state layout
 ``{'adapter': tri-LoRA tree, 'head': (D,K)}`` (plus method extras), so the
 runner in :mod:`repro.core.federated` is strategy-agnostic.
+
+Vectorization contract: every client-side method (``trainable`` /
+``grad_mask`` / ``effective_adapter`` / ``local_penalty`` / ``after_local``
+/ ``uplink`` / ``install``) is pure pytree algebra with no Python branching
+on leaf VALUES, so each one works unchanged either per-client (leaves
+``(…)``) or on a batched state whose leaves carry a leading client axis
+``(m, …)`` — and traces cleanly under ``jax.vmap`` inside the runner's
+vectorized local fit.  Only the server step distinguishes the layouts:
+``server`` consumes a list of per-client payloads, ``server_stacked``
+consumes one stacked payload tree and aggregates with fused einsums.
 """
 from __future__ import annotations
 
@@ -19,7 +29,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, tri_lora
+from repro.core import aggregation, client_batch, tri_lora
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +147,21 @@ class Strategy:
             return [g] * len(payloads)
         assert weights is not None, "personalized aggregation needs weights"
         return aggregation.aggregate_payloads(payloads, weights)
+
+    def server_stacked(self, payload: Any, *, sample_counts,
+                       weights=None) -> Optional[Any]:
+        """Batched-state variant of :meth:`server`: ``payload`` is ONE pytree
+        with a leading client axis (m, …); returns a stacked downlink of the
+        same layout (FedAvg results are broadcast back over the client axis)
+        or None when the strategy never communicates."""
+        if self.aggregate == "none":
+            return None
+        m = len(sample_counts)
+        if self.aggregate == "fedavg":
+            g = aggregation.fedavg_stacked(payload, sample_counts)
+            return client_batch.broadcast_to_clients(g, m)
+        assert weights is not None, "personalized aggregation needs weights"
+        return aggregation.aggregate_stacked(payload, weights)
 
     def install(self, state: dict, downlink: Any) -> dict:
         if downlink is None:

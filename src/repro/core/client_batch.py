@@ -1,0 +1,70 @@
+"""Batched-over-clients pytree utilities (the vectorized federated runtime).
+
+The reference federated runner treats client state as a Python list of m
+identically-structured pytrees and dispatches one jitted program per client
+per round — O(m) dispatches.  The vectorized paths instead keep ALL clients
+in ONE pytree whose every leaf carries a leading client axis:
+
+    list of m states, leaves (…)   ⇄   one state, leaves (m, …)
+
+Because every Strategy method in :mod:`repro.core.baselines` is written as
+pure pytree algebra (tree.map / select / install), the same strategy code
+operates on a stacked state unchanged; only the local-fit and eval closures
+need a ``jax.vmap`` over the client axis.  ``run_federated`` uses these
+helpers for its ``client_parallelism="vmap"`` / ``"shard"`` modes.
+
+Layout convention: the client axis is ALWAYS axis 0 of every leaf, which is
+what :func:`repro.launch.mesh.client_axis_sharding` lays over the device
+mesh in the ``"shard"`` path.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def stack_states(states: Sequence[Any]) -> Any:
+    """m identically-structured pytrees → one pytree with leaves (m, …)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(stacked: Any) -> list:
+    """Inverse of :func:`stack_states` (m per-client pytrees, views)."""
+    return [client_state(stacked, i) for i in range(n_clients(stacked))]
+
+
+def n_clients(stacked: Any) -> int:
+    """Extent of the leading client axis."""
+    return int(jax.tree.leaves(stacked)[0].shape[0])
+
+
+def client_state(stacked: Any, i: int) -> Any:
+    """Client i's slice of a stacked pytree."""
+    return jax.tree.map(lambda l: l[i], stacked)
+
+
+def broadcast_to_clients(tree: Any, m: int) -> Any:
+    """Replicate one (global) pytree across the client axis — used to install
+    a FedAvg downlink into a stacked state."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape), tree)
+
+
+def stack_client_batches(loaders: Sequence, n_batches: int
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Draw ``n_batches`` minibatches from each client's Loader and collate
+    into ``(m, n_batches, B, T)`` token / ``(m, n_batches, B)`` label tensors
+    — the input layout of ``vmap(scan(local_step))``.
+
+    Draws come from the same per-client RNG streams as the reference loop
+    path, so loop and vmap paths see identical data given the same seed.
+    """
+    toks, labs = [], []
+    for ld in loaders:
+        bt = list(ld.batches(n_batches))
+        toks.append(np.stack([b["tokens"] for b in bt]))
+        labs.append(np.stack([b["labels"] for b in bt]))
+    return jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labs))

@@ -1,20 +1,50 @@
 """Federated fine-tuning runtime (paper Algorithm 1).
 
 One server, m clients.  Per round: each client locally fine-tunes its
-tri-LoRA (strategy-dependent factors) on private data; uplinks its payload
-(C for CE-LoRA, A/B or B for baselines); the server aggregates — personalized
-(eqn 3) for CE-LoRA, FedAvg otherwise — and downlinks; clients install.
+tri-LoRA (strategy-dependent factors) on private data (Alg. 1 line 3);
+uplinks its payload (C for CE-LoRA — §III-B/D; A/B or B for the baselines);
+the server aggregates — personalized, eqn (3), for CE-LoRA, FedAvg
+otherwise — and downlinks; clients install (lines 7–9).  The one-shot
+dataset similarity S^data (eqns 5–6) is computed before round 0 and the
+model similarity S^model (eqns 7–9, CKA over the transmitted C) each round;
+their sum (eqn 4) drives the personalized weights.
 
 Communication is accounted exactly (floats up per client per round), which
 is the paper's Table III metric.
 
-The client-local training step is jitted once and shared across clients
-(identical shapes), with the strategy's gradient mask freezing the
-non-trainable factors.
+Client parallelism (``FedConfig.client_parallelism``)
+-----------------------------------------------------
+Selects how the m clients' local training is dispatched each round:
+
+* ``"loop"`` — the reference path: one jitted ``local_fit`` call per client
+  per round.  The jitted program is shared across clients (identical
+  shapes), with the strategy's gradient mask freezing the non-trainable
+  factors; still O(m) dispatches, so round wall-clock grows linearly in m.
+* ``"vmap"`` (default) — all m clients train as ONE batched program: client
+  states are stacked into a single pytree whose leaves carry a leading
+  client axis (m, …) (see :mod:`repro.core.client_batch`), minibatches are
+  collated to (m, local_steps, B, T), and one ``jax.vmap``-ed local fit
+  plus one vmapped masked eval run per round.  Server aggregation operates
+  directly on the stacked payload (fused einsums over the client axis, see
+  :mod:`repro.core.aggregation`).  O(1) dispatches per round — the Fig. 8
+  client-scaling benchmark stops being dispatch-bound.
+* ``"shard"`` — the vmap program with the stacked client axis additionally
+  laid over the local device mesh (:func:`repro.launch.mesh.
+  make_client_mesh`, NamedSharding with the leading axis on ``clients``),
+  so client batches train data-parallel across devices.  On a one-device
+  host this degenerates to exactly the vmap path.
+
+Batched state layout: the client axis is ALWAYS axis 0 of every leaf of the
+stacked state; Strategy methods operate on it unchanged (vectorization
+contract in :mod:`repro.core.baselines`).  All three paths consume the same
+per-client RNG data streams, so given the same seed they produce the same
+history up to floating-point reassociation (asserted in
+tests/test_client_parallel.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Optional
 
@@ -22,8 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, tri_lora
-from repro.core.baselines import Strategy, get_strategy
+from repro.core import aggregation, client_batch, tri_lora
+from repro.core.baselines import Strategy, count_floats, get_strategy
 from repro.core.fed_model import FedTask
 from repro.core.similarity import cka, gmm, ot
 from repro.data.pipeline import Loader
@@ -32,6 +62,8 @@ from repro.optim import adamw, apply_updates
 
 _LOCAL_FIT_CACHE: dict = {}
 _EVAL_CACHE: dict = {}
+
+PARALLELISM_MODES = ("loop", "vmap", "shard")
 
 
 @dataclasses.dataclass
@@ -43,6 +75,8 @@ class FedConfig:
     batch_size: int = 16
     lr: float = 5e-3
     seed: int = 0
+    # --- client dispatch: "loop" (reference) | "vmap" | "shard" ------------
+    client_parallelism: str = "vmap"
     # --- CE-LoRA similarity knobs (§III-C) ---------------------------------
     gmm_components: int = 2
     gmm_iters: int = 15
@@ -81,10 +115,35 @@ class RoundRecord:
 # S^data — one-shot GMM + OT dataset similarity (paper §III-C.1)
 # ---------------------------------------------------------------------------
 
+@jax.jit
+def _pairwise_dataset_distance(w, mu, var, counts, eps):
+    """All-pairs eqns (5)–(6) in one program: per-client GMM banks stacked as
+    w (m,K,G), mu (m,K,G,D), var (m,K,G,D), counts (m,K) → symmetric (m,m)
+    distance matrix with zero diagonal.  One vmap over the m(m-1)/2 upper-
+    triangle pairs replaces the former O(m²) Python loop of per-pair jit
+    dispatches (same solves, one dispatch)."""
+    def one(wi, mi, vi, ci, wj, mj, vj, cj):
+        return ot.dataset_distance(gmm.GMM(wi, mi, vi), ci,
+                                   gmm.GMM(wj, mj, vj), cj, eps)
+
+    m = w.shape[0]
+    iu, ju = np.triu_indices(m, k=1)          # static under jit (shape-only)
+    vals = jax.vmap(one)(w[iu], mu[iu], var[iu], counts[iu],
+                         w[ju], mu[ju], var[ju], counts[ju])
+    dist = jnp.zeros((m, m), vals.dtype).at[iu, ju].set(vals)
+    return dist + dist.T
+
+
 def data_similarity(task: FedTask, fed: FedConfig,
                     client_train: list[dict]) -> np.ndarray:
-    """Fit per-(client, category) GMMs on frozen-backbone features; compute
-    pairwise OT dataset distances; map to affinities."""
+    """One-shot S^data (m, m): fit per-(client, category) GMMs on
+    frozen-backbone features (§III-C.1), compute all pairwise OT dataset
+    distances (eqns 5–6) in one vectorized program, and map distance →
+    affinity (higher = more similar).
+
+    The GMM fitting stays a per-client Python loop (category masses are
+    data-dependent); the O(m²) pairwise stage is fully batched.
+    """
     g = fed.gmm_components
     feats_fn = jax.jit(task.features)
     m = len(client_train)
@@ -111,19 +170,11 @@ def data_similarity(task: FedTask, fed: FedConfig,
         all_w.append(np.stack(ws)); all_mu.append(np.stack(mus))
         all_var.append(np.stack(vars_)); all_counts.append(np.asarray(counts))
 
-    dist = np.zeros((m, m))
-    dfun = jax.jit(lambda ga, ca, gb, cb: ot.dataset_distance(
-        ga, ca, gb, cb, fed.sinkhorn_eps))
-    for i in range(m):
-        gi = gmm.GMM(jnp.asarray(all_w[i]), jnp.asarray(all_mu[i]),
-                     jnp.asarray(all_var[i]))
-        for j in range(i + 1, m):
-            gj = gmm.GMM(jnp.asarray(all_w[j]), jnp.asarray(all_mu[j]),
-                         jnp.asarray(all_var[j]))
-            d = float(dfun(gi, jnp.asarray(all_counts[i]),
-                           gj, jnp.asarray(all_counts[j])))
-            dist[i, j] = dist[j, i] = d
-    return np.asarray(ot.distance_to_affinity(jnp.asarray(dist)))
+    dist = _pairwise_dataset_distance(
+        jnp.asarray(np.stack(all_w)), jnp.asarray(np.stack(all_mu)),
+        jnp.asarray(np.stack(all_var)), jnp.asarray(np.stack(all_counts)),
+        fed.sinkhorn_eps)
+    return np.asarray(ot.distance_to_affinity(dist))
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +183,13 @@ def data_similarity(task: FedTask, fed: FedConfig,
 
 def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                   client_test: list[dict], verbose: bool = False) -> dict:
+    """Run Algorithm 1 for ``fed.rounds`` rounds; returns the history plus
+    final per-client states (as a list, regardless of parallelism mode)."""
     strategy = get_strategy(fed.method)
+    mode = fed.client_parallelism
+    if mode not in PARALLELISM_MODES:
+        raise ValueError(f"client_parallelism={mode!r}; "
+                         f"expected one of {PARALLELISM_MODES}")
     m = fed.n_clients
     assert len(client_train) == m
     key = jax.random.key(fed.seed)
@@ -143,7 +200,10 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     sample_counts = [len(d["labels"]) for d in client_train]
     opt = adamw(lr=fed.lr)
 
-    # ---- jitted local fit: `local_steps` optimizer steps over stacked batches
+    # ---- local fit: `local_steps` optimizer steps over stacked batches
+    # (Alg. 1 line 3).  Written per-client; the vectorized paths vmap it
+    # over the leading client axis.  ``w_ref`` is the pFedMe global point
+    # (the Moreau-envelope anchor) — an empty pytree for non-prox methods.
     def _local_fit(trainable, w_ref, tok_stack, lab_stack):
         opt_state = opt.init(trainable)
 
@@ -155,7 +215,7 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                 eff = strategy.effective_adapter(t)
                 loss, acc = task.loss({"adapter": eff, "head": t["head"]},
                                       toks, labs)
-                if strategy.prox and w_ref is not None:
+                if strategy.prox:
                     loss = loss + strategy.local_penalty(t, {"w": w_ref})
                 return loss
 
@@ -173,93 +233,142 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     # suite runs the same (task, method, hyper) combination many times and
     # XLA compilation dominates otherwise)
     cache_key = (id(task.base), id(task.cfg), strategy.name, fed.lr,
-                 fed.local_steps, fed.batch_size, fed.pfedme_eta)
+                 fed.local_steps, fed.batch_size, fed.pfedme_eta, mode)
     if cache_key in _LOCAL_FIT_CACHE:
         local_fit = _LOCAL_FIT_CACHE[cache_key]
     else:
-        local_fit = jax.jit(_local_fit)
+        local_fit = jax.jit(_local_fit if mode == "loop"
+                            else jax.vmap(_local_fit))
         _LOCAL_FIT_CACHE[cache_key] = local_fit
 
-    # ---- jitted masked eval over padded test sets (eager eval dominated
-    # the round time otherwise); padded rows carry label -1 and weight 0
+    # ---- masked eval over padded test sets, stacked to (m, pad_to, T)
+    # (eager per-example eval dominated the round time otherwise); padded
+    # rows carry label -1 and weight 0.  The loop path evaluates one client
+    # slice per call; the vectorized paths run ONE vmapped eval per round.
     pad_to = max(-(-len(d["labels"]) // 64) * 64 for d in client_test)
-    test_toks, test_labs = [], []
-    for d in client_test:
+    seq_lens = {d["tokens"].shape[1] for d in client_test}
+    if len(seq_lens) != 1:
+        raise ValueError(
+            "run_federated requires one shared test sequence length across "
+            f"clients (the eval batch stacks to (m, pad, T)); got {seq_lens}")
+    seq_len = seq_lens.pop()
+    tk = np.zeros((m, pad_to, seq_len), np.int32)
+    lb = np.full((m, pad_to), -1, np.int32)
+    for i, d in enumerate(client_test):
         n = len(d["labels"])
-        tk = np.zeros((pad_to, d["tokens"].shape[1]), np.int32)
-        lb = np.full((pad_to,), -1, np.int32)
-        tk[:n] = d["tokens"]
-        lb[:n] = d["labels"]
-        test_toks.append(jnp.asarray(tk))
-        test_labs.append(jnp.asarray(lb))
+        tk[i, :n] = d["tokens"]
+        lb[i, :n] = d["labels"]
+    test_toks = jnp.asarray(tk)
+    test_labs = jnp.asarray(lb)
 
-    eval_key = (id(task.base), id(task.cfg), strategy.name, pad_to)
+    def _eval_one(trainable, toks, labs):
+        eff = strategy.effective_adapter(trainable)
+        logits = task.logits(eff, trainable["head"], toks)
+        w = (labs >= 0).astype(jnp.float32)
+        correct = (jnp.argmax(logits, -1) == labs) * w
+        return jnp.sum(correct) / jnp.maximum(jnp.sum(w), 1.0)
+
+    eval_key = (id(task.base), id(task.cfg), strategy.name, pad_to, mode)
     if eval_key in _EVAL_CACHE:
         eval_fn = _EVAL_CACHE[eval_key]
     else:
-        @jax.jit
-        def eval_fn(trainable, toks, labs):
-            eff = strategy.effective_adapter(trainable)
-            logits = task.logits(eff, trainable["head"], toks)
-            w = (labs >= 0).astype(jnp.float32)
-            correct = (jnp.argmax(logits, -1) == labs) * w
-            return jnp.sum(correct) / jnp.maximum(jnp.sum(w), 1.0)
+        eval_fn = jax.jit(_eval_one if mode == "loop"
+                          else jax.vmap(_eval_one))
         _EVAL_CACHE[eval_key] = eval_fn
-
-    def eval_client(state, i):
-        return float(eval_fn(strategy.trainable(state), test_toks[i],
-                             test_labs[i]))
 
     # ---- one-shot S^data (paper: computed once at FL start)
     s_data = None
     if strategy.aggregate == "personalized" and fed.use_data_sim:
         s_data = data_similarity(task, fed, client_train)
 
+    def personalized(weighted_payload_src):
+        """Eqn (3) weights from S = S^data (+ S^model this round)."""
+        sims = []
+        if fed.use_data_sim and s_data is not None:
+            sims.append(jnp.asarray(s_data))
+        if fed.use_model_sim:
+            sims.append(weighted_payload_src())
+        assert sims, "celora needs at least one similarity term"
+        return aggregation.personalized_weights(sum(sims), fed.self_weight)
+
     history: list[RoundRecord] = []
-    for rnd in range(fed.rounds):
-        t0 = time.time()
-        losses = []
-        # ---- local fine-tuning (paper Alg.1 line 3)
-        for i in range(m):
-            bt = list(loaders[i].batches(fed.local_steps))
-            toks = jnp.asarray(np.stack([b["tokens"] for b in bt]))
-            labs = jnp.asarray(np.stack([b["labels"] for b in bt]))
-            tr = strategy.trainable(states[i])
-            w_ref = states[i].get("w")
-            tr, loss = local_fit(tr, w_ref, toks, labs)
-            states[i].update(tr)
-            states[i] = strategy.after_local(states[i], fed.pfedme_eta)
-            losses.append(float(loss))
 
-        # ---- uplink + aggregation (lines 4, 7–9)
-        payloads = [strategy.uplink(s) for s in states]
-        up_floats = sum(strategy.uplink_floats(s) for s in states)
-        weights = None
-        if strategy.aggregate == "personalized":
-            sims = []
-            if fed.use_data_sim and s_data is not None:
-                sims.append(jnp.asarray(s_data))
-            if fed.use_model_sim:
-                c_trees = [tri_lora.tree_payload(s["adapter"]) for s in states]
-                s_model = cka.pairwise_model_similarity(
-                    c_trees, jax.random.key(fed.seed + 97), fed.cka_probes)
-                sims.append(s_model)
-            assert sims, "celora needs at least one similarity term"
-            s_total = sum(sims)                       # eqn (4)
-            weights = aggregation.personalized_weights(
-                s_total, fed.self_weight)             # eqn (3)
-        downs = strategy.server(payloads, sample_counts=sample_counts,
-                                weights=weights)
-        states = [strategy.install(s, d) for s, d in zip(states, downs)]
+    if mode == "loop":
+        # ---- reference path: one dispatch per client per round
+        for rnd in range(fed.rounds):
+            t0 = time.time()
+            losses = []
+            for i in range(m):
+                bt = list(loaders[i].batches(fed.local_steps))
+                toks = jnp.asarray(np.stack([b["tokens"] for b in bt]))
+                labs = jnp.asarray(np.stack([b["labels"] for b in bt]))
+                tr = strategy.trainable(states[i])
+                w_ref = states[i].get("w", {})
+                tr, loss = local_fit(tr, w_ref, toks, labs)
+                states[i].update(tr)
+                states[i] = strategy.after_local(states[i], fed.pfedme_eta)
+                losses.append(float(loss))
 
-        accs = [eval_client(states[i], i) for i in range(m)]
-        rec = RoundRecord(rnd, float(np.mean(losses)), accs, up_floats,
-                          time.time() - t0)
-        history.append(rec)
-        if verbose:
-            print(f"[{strategy.name}] round {rnd:3d} loss {rec.train_loss:.4f}"
-                  f" acc {rec.mean_acc:.3f} (min {rec.min_acc:.3f}"
-                  f" max {rec.max_acc:.3f}) up {up_floats}")
+            payloads = [strategy.uplink(s) for s in states]
+            up_floats = sum(strategy.uplink_floats(s) for s in states)
+            weights = None
+            if strategy.aggregate == "personalized":
+                weights = personalized(lambda: cka.pairwise_model_similarity(
+                    [tri_lora.tree_payload(s["adapter"]) for s in states],
+                    jax.random.key(fed.seed + 97), fed.cka_probes))
+            downs = strategy.server(payloads, sample_counts=sample_counts,
+                                    weights=weights)
+            states = [strategy.install(s, d) for s, d in zip(states, downs)]
+
+            accs = [float(eval_fn(strategy.trainable(states[i]),
+                                  test_toks[i], test_labs[i]))
+                    for i in range(m)]
+            history.append(RoundRecord(rnd, float(np.mean(losses)), accs,
+                                       up_floats, time.time() - t0))
+            if verbose:
+                _print_round(strategy, history[-1])
+    else:
+        # ---- vectorized path: ONE batched program per round
+        stacked = client_batch.stack_states(states)
+        if mode == "shard":
+            from repro.launch import mesh as mesh_lib
+            cmesh = mesh_lib.make_client_mesh(m)
+            put = functools.partial(mesh_lib.shard_clients, cmesh)
+            stacked = put(stacked)
+        else:
+            put = lambda t: t
+
+        for rnd in range(fed.rounds):
+            t0 = time.time()
+            toks, labs = client_batch.stack_client_batches(loaders,
+                                                           fed.local_steps)
+            tr = strategy.trainable(stacked)
+            w_ref = stacked.get("w", {})
+            tr, losses = local_fit(tr, w_ref, put(toks), put(labs))
+            stacked.update(tr)
+            stacked = strategy.after_local(stacked, fed.pfedme_eta)
+
+            payload = strategy.uplink(stacked)       # stacked tree or None
+            up_floats = 0 if payload is None else count_floats(payload)
+            weights = None
+            if strategy.aggregate == "personalized":
+                weights = personalized(
+                    lambda: cka.pairwise_model_similarity_stacked(
+                        tri_lora.tree_payload(stacked["adapter"]),
+                        jax.random.key(fed.seed + 97), fed.cka_probes))
+            down = strategy.server_stacked(payload,
+                                           sample_counts=sample_counts,
+                                           weights=weights)
+            stacked = strategy.install(stacked, down)
+
+            accs_arr = eval_fn(strategy.trainable(stacked),
+                               test_toks, test_labs)
+            accs = [float(a) for a in np.asarray(accs_arr)]
+            history.append(RoundRecord(rnd, float(np.mean(losses)), accs,
+                                       up_floats, time.time() - t0))
+            if verbose:
+                _print_round(strategy, history[-1])
+        states = client_batch.unstack_states(stacked)
 
     return {
         "method": strategy.name,
@@ -271,3 +380,9 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         "uplink_floats_per_round": history[-1].uplink_floats,
         "states": states,
     }
+
+
+def _print_round(strategy: Strategy, rec: RoundRecord) -> None:
+    print(f"[{strategy.name}] round {rec.round:3d} loss {rec.train_loss:.4f}"
+          f" acc {rec.mean_acc:.3f} (min {rec.min_acc:.3f}"
+          f" max {rec.max_acc:.3f}) up {rec.uplink_floats}")

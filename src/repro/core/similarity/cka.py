@@ -11,6 +11,7 @@ CKA ∈ [0, 1]; 1 = identical representation geometry.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -82,3 +83,19 @@ def pairwise_model_similarity(c_trees: list, key: jax.Array,
     """S^model (m, m): mean over adapted modules of per-module CKA."""
     cs = stack_client_cs(c_trees)                              # (m,M,r,r)
     return _pairwise_cka_stacked(cs, key, n_probes)
+
+
+def stacked_cs(c_tree: Any) -> jnp.ndarray:
+    """Stacked-payload variant of :func:`stack_client_cs`: ONE C-pytree whose
+    leaves already carry a leading client axis (m, …, r, r) — the layout the
+    vectorized federated runner keeps — folded to (m, n_modules, r, r)
+    without any per-client Python work."""
+    leaves = [l.reshape(l.shape[0], -1, l.shape[-2], l.shape[-1])
+              for l in jax.tree.leaves(c_tree)]
+    return jnp.concatenate(leaves, axis=1)
+
+
+def pairwise_model_similarity_stacked(c_tree: Any, key: jax.Array,
+                                      n_probes: int = 64) -> jnp.ndarray:
+    """S^model (m, m) from a stacked C payload (leaves (m, …, r, r))."""
+    return _pairwise_cka_stacked(stacked_cs(c_tree), key, n_probes)

@@ -1,9 +1,16 @@
-"""Production mesh definitions (TPU v5e).
+"""Production mesh definitions (TPU v5e) + the federated client axis.
 
 Single pod: 256 chips as (data=16, model=16).
 Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16) — the ``pod``
 axis is the federated-client boundary in CE-LoRA's mapping (DESIGN.md §3):
 only the r×r C matrices ever cross it.
+
+For simulated federated runs (many clients sharing one host or pod), the
+``clients`` axis built by :func:`make_client_mesh` lays the LEADING client
+axis of the batched runtime state (see :mod:`repro.core.client_batch`) over
+the local devices; :func:`client_axis_sharding` produces the matching
+NamedSharding pytree.  ``run_federated(..., client_parallelism="shard")``
+is the consumer.
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before first jax init).
@@ -11,6 +18,8 @@ state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 SINGLE_POD = (16, 16)
 MULTI_POD = (2, 16, 16)
@@ -30,3 +39,37 @@ def make_host_mesh() -> jax.sharding.Mesh:
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """Axes the global batch shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# federated client axis (the vectorized multi-client runtime)
+# ---------------------------------------------------------------------------
+
+def make_client_mesh(n_clients: int | None = None, devices=None) -> Mesh:
+    """1-D ``("clients",)`` mesh over local devices.
+
+    Uses the largest device count that divides ``n_clients`` so the stacked
+    client axis splits evenly (GSPMD requires divisibility); degrades to a
+    single-device mesh — where the shard path is exactly the vmap path — on
+    hosts with one device or a client count coprime to the device count.
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    if n_clients is None:
+        d = len(devices)
+    else:
+        d = max(k for k in range(1, len(devices) + 1) if n_clients % k == 0)
+    return Mesh(np.asarray(devices[:d]), ("clients",))
+
+
+def client_axis_sharding(mesh: Mesh, tree) -> object:
+    """NamedSharding pytree: leading (client) axis of every leaf on
+    ``clients``, everything else replicated within a client's shard."""
+    def one(leaf):
+        return NamedSharding(
+            mesh, P("clients", *(None,) * (leaf.ndim - 1)))
+    return jax.tree.map(one, tree)
+
+
+def shard_clients(mesh: Mesh, tree):
+    """Lay a stacked client pytree over the ``clients`` mesh axis."""
+    return jax.device_put(tree, client_axis_sharding(mesh, tree))

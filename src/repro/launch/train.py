@@ -10,6 +10,11 @@ On the CPU container this trains the ~100M `fed-100m` config for a few
 hundred total steps (examples/federated_finetune.py wraps exactly this).
 For TPU, the same step functions lower against the production mesh
 (see launch/dryrun.py).
+
+Like the classification runtime (`repro.core.federated`, DESIGN.md §6),
+client dispatch is selectable: ``client_parallelism="vmap"`` (default)
+stacks all clients' adapters on a leading client axis and runs ONE batched
+local fit per round; ``"loop"`` is the one-dispatch-per-client reference.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save
-from repro.core import aggregation, tri_lora
+from repro.core import aggregation, client_batch, tri_lora
 from repro.core.similarity import cka
 from repro.data import synthetic
 from repro.models import model
@@ -33,7 +38,9 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         local_steps: int = 20, batch: int = 8, seq: int = 256,
         lr: float = 3e-3, seed: int = 0, method: str = "celora",
         ckpt: str | None = None, verbose: bool = True,
-        reduced: bool = False) -> dict:
+        reduced: bool = False, client_parallelism: str = "vmap") -> dict:
+    assert client_parallelism in ("loop", "vmap"), client_parallelism
+    vectorized = client_parallelism == "vmap"
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -52,8 +59,7 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
                 for i in range(clients)]
     opt = adamw(lr=lr)
 
-    @jax.jit
-    def local_fit(adapter, toks, labs):
+    def _local_fit(adapter, toks, labs):
         state = opt.init(adapter)
 
         def step(carry, b):
@@ -69,34 +75,62 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
                                             (toks, labs))
         return adapter, losses
 
+    local_fit = jax.jit(jax.vmap(_local_fit) if vectorized else _local_fit)
+    stacked = client_batch.stack_states(adapters) if vectorized else None
+
+    def _draw(i):
+        bs = [next(iters[i]) for _ in range(local_steps)]
+        return (np.stack([b["tokens"] for b in bs]),
+                np.stack([b["labels"] for b in bs]))
+
     history = []
     for rnd in range(rounds):
         t0 = time.time()
-        losses = []
-        for i in range(clients):
-            bs = [next(iters[i]) for _ in range(local_steps)]
-            toks = jnp.asarray(np.stack([b["tokens"] for b in bs]))
-            labs = jnp.asarray(np.stack([b["labels"] for b in bs]))
-            adapters[i], ls = local_fit(adapters[i], toks, labs)
-            losses.append(float(ls[-1]))
+        if vectorized:
+            drawn = [_draw(i) for i in range(clients)]
+            toks = jnp.asarray(np.stack([d[0] for d in drawn]))
+            labs = jnp.asarray(np.stack([d[1] for d in drawn]))
+            stacked, ls = local_fit(stacked, toks, labs)   # ls (m, steps)
+            losses = [float(l) for l in np.asarray(ls[:, -1])]
+        else:
+            losses = []
+            for i in range(clients):
+                toks, labs = (jnp.asarray(a) for a in _draw(i))
+                adapters[i], ls = local_fit(adapters[i], toks, labs)
+                losses.append(float(ls[-1]))
 
         up_floats = 0
         if method == "celora":
-            payloads = [tri_lora.tree_payload(a) for a in adapters]
-            up_floats = clients * sum(int(c.size)
-                                      for c in jax.tree.leaves(payloads[0]))
-            s_model = cka.pairwise_model_similarity(
-                payloads, jax.random.key(seed + 99), 32)
-            w = aggregation.personalized_weights(s_model)
-            downs = aggregation.aggregate_payloads(payloads, w)
-            adapters = [tri_lora.tree_load_payload(a, d)
-                        for a, d in zip(adapters, downs)]
+            if vectorized:
+                payload = tri_lora.tree_payload(stacked)
+                up_floats = sum(int(c.size) for c in jax.tree.leaves(payload))
+                s_model = cka.pairwise_model_similarity_stacked(
+                    payload, jax.random.key(seed + 99), 32)
+                w = aggregation.personalized_weights(s_model)
+                mixed = aggregation.aggregate_stacked(payload, w)
+                stacked = tri_lora.tree_load_payload(stacked, mixed)
+            else:
+                payloads = [tri_lora.tree_payload(a) for a in adapters]
+                up_floats = clients * sum(int(c.size)
+                                          for c in jax.tree.leaves(payloads[0]))
+                s_model = cka.pairwise_model_similarity(
+                    payloads, jax.random.key(seed + 99), 32)
+                w = aggregation.personalized_weights(s_model)
+                downs = aggregation.aggregate_payloads(payloads, w)
+                adapters = [tri_lora.tree_load_payload(a, d)
+                            for a, d in zip(adapters, downs)]
         elif method == "fedavg":
-            payloads = [jax.tree.map(lambda x: x, a) for a in adapters]
-            up_floats = clients * sum(int(x.size)
-                                      for x in jax.tree.leaves(adapters[0]))
-            g = aggregation.fedavg(payloads, [1] * clients)
-            adapters = [jax.tree.map(lambda x: x, g) for _ in range(clients)]
+            if vectorized:
+                up_floats = sum(int(x.size) for x in jax.tree.leaves(stacked))
+                g = aggregation.fedavg_stacked(stacked, [1] * clients)
+                stacked = client_batch.broadcast_to_clients(g, clients)
+            else:
+                payloads = [jax.tree.map(lambda x: x, a) for a in adapters]
+                up_floats = clients * sum(int(x.size)
+                                          for x in jax.tree.leaves(adapters[0]))
+                g = aggregation.fedavg(payloads, [1] * clients)
+                adapters = [jax.tree.map(lambda x: x, g)
+                            for _ in range(clients)]
 
         rec = {"round": rnd, "loss": float(np.mean(losses)),
                "uplink_floats": up_floats, "wall_s": time.time() - t0}
@@ -105,6 +139,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             print(f"round {rnd:3d}  loss {rec['loss']:.4f}  "
                   f"uplink {up_floats}  {rec['wall_s']:.1f}s", flush=True)
 
+    if vectorized:
+        adapters = client_batch.unstack_states(stacked)
     if ckpt:
         save(ckpt, {"adapter_client0": adapters[0]},
              metadata={"arch": arch, "rounds": rounds, "method": method})
@@ -127,11 +163,14 @@ def main():
                     choices=["celora", "fedavg", "local"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--client-parallelism", default="vmap",
+                    choices=["loop", "vmap"])
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
               lr=args.lr, method=args.method, ckpt=args.ckpt,
-              reduced=args.reduced)
+              reduced=args.reduced,
+              client_parallelism=args.client_parallelism)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

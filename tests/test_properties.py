@@ -1,8 +1,15 @@
-"""Hypothesis property-based tests on the system's invariants."""
+"""Hypothesis property-based tests on the system's invariants.
+
+``hypothesis`` is an optional dev dependency (``pip install -e .[dev]``);
+on a bare environment the whole module is skipped at collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import aggregation, tri_lora
 from repro.core.similarity import ot

@@ -14,9 +14,18 @@ from repro.launch.steps import SHAPES, abstract_cache, input_specs, shape_varian
 from repro.models import model
 from repro.models.config import get_config
 
+def _abstract_mesh(shape, names):
+    """AbstractMesh across jax versions: >=0.5 takes (shape, axis_names);
+    0.4.x takes one tuple of (name, size) pairs."""
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
 MESHES = {
-    "16x16": AbstractMesh((16, 16), ("data", "model")),
-    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "16x16": _abstract_mesh((16, 16), ("data", "model")),
+    "2x16x16": _abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
@@ -56,7 +65,7 @@ def test_c_matrices_replicated(arch):
         names = shd._path_names(path)
         if names[-1] == "C":
             assert all(s is None for s in spec), (names, spec)
-    jax.tree.map_with_path(check, specs)
+    jax.tree_util.tree_map_with_path(check, specs)
 
 
 def test_serving_layout_drops_fsdp():

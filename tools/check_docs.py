@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Docs link check (CI): every repo path mentioned in README.md / DESIGN.md
+must exist, and every DESIGN.md section cited from source docstrings
+(``DESIGN.md §N``) must be present in DESIGN.md.
+
+Exit code 0 = all references resolve.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "DESIGN.md"]
+# repo-relative paths as they appear in docs (code spans, commands, prose)
+PATH_RE = re.compile(
+    r"\b((?:src|examples|benchmarks|tests|tools|\.github)/"
+    r"[\w./\-]+\.(?:py|md|toml|yml|yaml))\b")
+SECTION_CITE_RE = re.compile(r"DESIGN\.md §(\d+)")
+SECTION_DEF_RE = re.compile(r"^##\s*§?(\d+)", re.MULTILINE)
+
+
+def main() -> int:
+    bad: list[str] = []
+    design = (ROOT / "DESIGN.md")
+    defined = set(SECTION_DEF_RE.findall(design.read_text())) \
+        if design.exists() else set()
+
+    for doc in DOCS:
+        p = ROOT / doc
+        if not p.exists():
+            bad.append(f"{doc}: missing")
+            continue
+        text = p.read_text()
+        for ref in sorted(set(PATH_RE.findall(text))):
+            if not (ROOT / ref).exists():
+                bad.append(f"{doc}: references nonexistent path {ref}")
+
+    # docstring citations like "DESIGN.md §3" must resolve to a section
+    for src in sorted((ROOT / "src").rglob("*.py")):
+        for num in set(SECTION_CITE_RE.findall(src.read_text())):
+            if num not in defined:
+                bad.append(f"{src.relative_to(ROOT)}: cites DESIGN.md §{num} "
+                           f"but DESIGN.md has no section §{num}")
+
+    if bad:
+        print("docs check FAILED:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print(f"docs check OK ({', '.join(DOCS)}; "
+          f"{len(defined)} DESIGN.md sections)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
