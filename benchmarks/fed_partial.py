@@ -1,0 +1,88 @@
+"""Partial-participation sweep — participation fraction × sampler × method
+(beyond-paper scenario; cf. the cross-device settings of CELLM / pFedLoRA
+in PAPERS.md).
+
+Every major FL system samples a fraction of clients per round; this sweep
+measures what that does to the paper's two headline quantities at once:
+
+- **bytes/round** — exact dtype-aware uplink bytes of the participants'
+  real payload pytrees (repro.core.comm), i.e. Table III measured end-to-
+  end per method rather than analytically;
+- **rounds-to-target** — rounds until mean accuracy first reaches a target
+  (fraction of the full-participation final accuracy), the convergence
+  cost of training fewer clients per round.
+
+The celora-vs-FedPETuning byte ratio at equal rank is asserted < 10%
+(the r² payload vs r·(d_in+d_out)) on the default config.
+
+Usage:  PYTHONPATH=src python benchmarks/fed_partial.py [--quick]
+
+Prints CSV: method,sampler,participation,uplink_bytes_round,
+downlink_bytes_round,rounds_to_target,final_acc.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import run_method  # noqa: E402
+
+METHODS = ["celora", "fedpetuning", "ffa_lora"]
+FRACTIONS = [1.0, 0.5, 0.2]
+SAMPLERS = ["uniform", "weighted", "round_robin"]
+TARGET_FRAC = 0.95     # of the full-participation final mean accuracy
+
+
+def rounds_to(history, target: float) -> int | None:
+    for rec in history:
+        if rec.mean_acc >= target:
+            return rec.round + 1
+    return None
+
+
+def main(quick: bool = False) -> dict:
+    rounds = 6 if quick else 12
+    n_clients = 6 if quick else 10
+    samplers = ["uniform"] if quick else SAMPLERS
+    fractions = [1.0, 0.5] if quick else FRACTIONS
+    print("# fed_partial — bytes/round and rounds-to-target vs participation")
+    print("method,sampler,participation,uplink_bytes_round,"
+          "downlink_bytes_round,rounds_to_target,final_acc")
+    results: dict = {}
+    for method in METHODS:
+        # full-participation reference fixes the accuracy target
+        ref = run_method(method, rounds=rounds, n_clients=n_clients)
+        target = TARGET_FRAC * ref["mean_acc"]
+        for sampler in samplers:
+            for frac in fractions:
+                if frac == 1.0 and sampler != samplers[0]:
+                    continue        # all samplers coincide at participation=1
+                out = (ref if frac == 1.0 else
+                       run_method(method, rounds=rounds, n_clients=n_clients,
+                                  participation=frac, sampler=sampler))
+                r2t = rounds_to(out["history"], target)
+                results[(method, sampler, frac)] = out
+                print(f"{method},{sampler},{frac},"
+                      f"{out['uplink_bytes_per_round']},"
+                      f"{out['downlink_bytes_per_round']},"
+                      f"{r2t if r2t is not None else '>' + str(rounds)},"
+                      f"{out['mean_acc']:.3f}")
+
+    # Table-III end-to-end: celora's measured uplink must be well under 10%
+    # of FedPETuning's at equal rank and equal participation
+    for frac in fractions:
+        s = samplers[0]
+        cel = results[("celora", s, frac)]["uplink_bytes_per_round"]
+        fpt = results[("fedpetuning", s, frac)]["uplink_bytes_per_round"]
+        ratio = cel / fpt
+        print(f"# participation={frac}: celora/fedpetuning uplink bytes "
+              f"= {cel}/{fpt} = {100 * ratio:.2f}%")
+        assert ratio < 0.10, (frac, cel, fpt)
+    print("# celora < 10% of FedPETuning uplink bytes at every "
+          "participation level — OK")
+    return results
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -39,6 +39,7 @@ BENCHES = {}
 def _register():
     import beyond_selfweight
     import fed_comm
+    import fed_partial
     import fed_scale
     import fig5_privacy
     import fig6_alpha
@@ -63,6 +64,7 @@ def _register():
         "fig10_rank": fig10_rank.main,            # Fig 10
         "beyond_selfweight": beyond_selfweight.main,  # beyond-paper λ
         "fed_comm": fed_comm.main,                # cross-pod bytes (ours)
+        "fed_partial": fed_partial.main,          # partial participation (ours)
         "fed_scale": fed_scale.main,              # client-dispatch scaling (ours)
         "roofline": _roofline,                    # §Roofline (ours)
     })

@@ -21,23 +21,47 @@ list forms stack internally and delegate to the stacked forms.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 
 def personalized_weights(similarity: jnp.ndarray,
-                         self_weight: float = 0.0) -> jnp.ndarray:
+                         self_weight: float = 0.0,
+                         participants: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
     """similarity: (m, m), symmetric, higher = more similar.
     Returns row-stochastic W (m, m): W[i] are client i's aggregation weights.
+
+    ``participants`` (optional boolean (m,) mask, partial participation):
+    only participating clients' columns can carry weight — absentees never
+    uplinked a C this round — and each row renormalizes over those columns.
+    Rows of absent clients are still well-formed but unused (the runtime
+    installs downlinks to participants only).
+
+    Degenerate rows — all eligible similarities ≤ 0 (so eqn (3)'s
+    denominator vanishes) — fall back to UNIFORM over the eligible others
+    instead of the near-zero row a clamped denominator would produce (which
+    silently wiped that client's aggregated C).  A row with no eligible
+    others at all (m = 1, or a sole participant) keeps itself (identity
+    row), so W·payload never zeroes a client's C.
     """
     m = similarity.shape[0]
     eye = jnp.eye(m, dtype=bool)
     s = jnp.where(eye, 0.0, similarity)
     s = jnp.maximum(s, 0.0)
-    denom = jnp.maximum(jnp.sum(s, axis=1, keepdims=True), 1e-12)
-    w = s / denom                                   # eqn (3), j ≠ i
+    eligible = ~eye
+    if participants is not None:
+        pmask = jnp.asarray(participants, bool)
+        s = jnp.where(pmask[None, :], s, 0.0)
+        eligible = eligible & pmask[None, :]
+    denom = jnp.sum(s, axis=1, keepdims=True)
+    n_elig = jnp.sum(eligible, axis=1, keepdims=True)
+    uniform = eligible.astype(s.dtype) / jnp.maximum(n_elig, 1).astype(s.dtype)
+    ok = denom > 1e-12
+    w = jnp.where(ok, s / jnp.where(ok, denom, 1.0), uniform)  # eqn (3), j ≠ i
+    w = jnp.where(n_elig > 0, w, jnp.eye(m, dtype=w.dtype))
     if self_weight:
         w = (1.0 - self_weight) * w + self_weight * jnp.eye(m)
     return w
@@ -60,19 +84,35 @@ def aggregate_payloads(payloads: Sequence[Any], weights: jnp.ndarray) -> list:
     return [jax.tree.map(lambda l, i=i: l[i], mixed) for i in range(m)]
 
 
-def fedavg_stacked(stacked: Any, sample_counts: Sequence[int]) -> Any:
+def fedavg_stacked(stacked: Any, sample_counts: Sequence[int],
+                   participants: Optional[jnp.ndarray] = None) -> Any:
     """FedAvg over a STACKED payload: leaves (m, …) → ONE global pytree
-    (sample-count weighted mean over the client axis)."""
+    (sample-count weighted mean over the client axis).
+
+    ``participants`` (optional boolean (m,) mask): absent clients' counts
+    are zeroed so the mean renormalizes over the participants — arithmetic
+    identical to averaging the participant subset, while keeping the fused
+    full-m einsum (absent terms contribute exact zeros).
+
+    If every eligible count is zero (a round that sampled only empty-shard
+    clients), the mean degrades to UNIFORM over the eligible clients rather
+    than 0/0 = NaN wiping the payload."""
     n = jnp.asarray(sample_counts, jnp.float32)
-    w = n / jnp.sum(n)
+    elig = (jnp.ones_like(n) if participants is None
+            else jnp.asarray(participants, jnp.float32))
+    n = n * elig
+    tot = jnp.sum(n)
+    uniform = elig / jnp.maximum(jnp.sum(elig), 1.0)
+    w = jnp.where(tot > 0, n / jnp.where(tot > 0, tot, 1.0), uniform)
     return jax.tree.map(
         lambda l: jnp.einsum("j,j...->...", w.astype(l.dtype), l), stacked)
 
 
-def fedavg(payloads: Sequence[Any], sample_counts: Sequence[int]) -> Any:
+def fedavg(payloads: Sequence[Any], sample_counts: Sequence[int],
+           participants: Optional[jnp.ndarray] = None) -> Any:
     """FedPETuning-style sample-weighted average; returns ONE global pytree."""
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
-    return fedavg_stacked(stacked, sample_counts)
+    return fedavg_stacked(stacked, sample_counts, participants)
 
 
 def hierarchical_weights(similarity: jnp.ndarray, edge_of: jnp.ndarray,

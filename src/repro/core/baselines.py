@@ -29,7 +29,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, client_batch, tri_lora
+from repro.core import aggregation, client_batch, comm, tri_lora
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +60,9 @@ def adapter_grad_mask(adapter_tree: Any, train_keys: tuple[str, ...]) -> Any:
 
 
 def count_floats(tree: Any) -> int:
-    return sum(int(x.size) for x in jax.tree.leaves(tree))
+    """Dtype-blind element count — delegates to the comm accounting so the
+    two never diverge (use comm.tree_bytes for the wire-byte truth)."""
+    return comm.tree_elems(tree)
 
 
 # ---------------------------------------------------------------------------
@@ -138,27 +140,35 @@ class Strategy:
             return src  # already the selected sub-tree
         return _select(src, self.uplink_keys)
 
-    def server(self, payloads: list, *, sample_counts, weights=None) -> list:
-        """Returns per-client downlinks."""
+    def server(self, payloads: list, *, sample_counts, weights=None,
+               participants=None) -> list:
+        """Returns per-client downlinks.  ``payloads`` always covers all m
+        clients (absentees contribute their last-uploaded payload, which the
+        masks below zero out); ``participants`` is an optional boolean (m,)
+        mask restricting aggregation to the clients that completed the round
+        (partial participation — see :mod:`repro.core.sampling`)."""
         if self.aggregate == "none":
             return [None] * len(payloads)
         if self.aggregate == "fedavg":
-            g = aggregation.fedavg(payloads, sample_counts)
+            g = aggregation.fedavg(payloads, sample_counts, participants)
             return [g] * len(payloads)
         assert weights is not None, "personalized aggregation needs weights"
         return aggregation.aggregate_payloads(payloads, weights)
 
     def server_stacked(self, payload: Any, *, sample_counts,
-                       weights=None) -> Optional[Any]:
+                       weights=None, participants=None) -> Optional[Any]:
         """Batched-state variant of :meth:`server`: ``payload`` is ONE pytree
         with a leading client axis (m, …); returns a stacked downlink of the
         same layout (FedAvg results are broadcast back over the client axis)
-        or None when the strategy never communicates."""
+        or None when the strategy never communicates.  ``participants``
+        masks the aggregation as in :meth:`server`; the caller installs the
+        downlink to participants only (`client_batch.select_clients`)."""
         if self.aggregate == "none":
             return None
         m = len(sample_counts)
         if self.aggregate == "fedavg":
-            g = aggregation.fedavg_stacked(payload, sample_counts)
+            g = aggregation.fedavg_stacked(payload, sample_counts,
+                                           participants)
             return client_batch.broadcast_to_clients(g, m)
         assert weights is not None, "personalized aggregation needs weights"
         return aggregation.aggregate_stacked(payload, weights)

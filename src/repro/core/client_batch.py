@@ -46,6 +46,17 @@ def client_state(stacked: Any, i: int) -> Any:
     return jax.tree.map(lambda l: l[i], stacked)
 
 
+def select_clients(mask: Any, new: Any, old: Any) -> Any:
+    """Per-client pytree select over the leading axis: client i's leaves come
+    from ``new`` where ``mask[i]`` else from ``old`` — the masked install of
+    the partial-participation runtime (non-participants keep their previous
+    state; see :mod:`repro.core.sampling`).  ``mask`` is boolean (m,)."""
+    mask = jnp.asarray(mask, bool)
+    return jax.tree.map(
+        lambda n_, o_: jnp.where(
+            mask.reshape((-1,) + (1,) * (n_.ndim - 1)), n_, o_), new, old)
+
+
 def broadcast_to_clients(tree: Any, m: int) -> Any:
     """Replicate one (global) pytree across the client axis — used to install
     a FedAvg downlink into a stacked state."""

@@ -1,0 +1,111 @@
+"""Exact per-round communication accounting (the paper's Table-III metric,
+measured in BYTES from the real payload pytrees).
+
+The pre-PR runtime tracked a single dtype-blind ``uplink_floats`` element
+count.  That hides exactly the thing CE-LoRA is about: a bf16 C payload
+costs half the wire bytes of an f32 one, and downlink was never counted at
+all.  Here every number is derived from the payload pytree the strategy
+actually uplinks — ``Σ leaf.size · leaf.dtype.itemsize`` — so the
+accounting cannot drift from the transport code (asserted leaf-by-leaf in
+tests/test_comm.py).
+
+Model: per round, each *participant* (post-straggler, see
+:mod:`repro.core.sampling`) uplinks one payload tree and receives one
+downlink of the identical tree structure (FedAvg broadcasts the global
+aggregate; personalized aggregation returns the client's own mix C̄_i —
+either way the wire bytes per client equal the payload bytes).  Stragglers
+cost nothing: the drop happens before upload.  Strategies with
+``aggregate="none"`` never communicate.
+
+Works on concrete arrays and on ``jax.eval_shape`` outputs
+(ShapeDtypeStruct), so analytic benchmarks can account full-size models
+without materializing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def leaf_bytes(leaf: Any) -> int:
+    """size · itemsize of one array-like (array or ShapeDtypeStruct)."""
+    return int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+
+
+def tree_bytes(tree: Any) -> int:
+    """Exact wire bytes of a payload pytree: Σ leaf.size · itemsize."""
+    return sum(leaf_bytes(l) for l in jax.tree.leaves(tree))
+
+
+def tree_elems(tree: Any) -> int:
+    """Dtype-blind element count (the deprecated ``uplink_floats`` unit)."""
+    return sum(int(np.prod(l.shape, dtype=np.int64))
+               for l in jax.tree.leaves(tree))
+
+
+def stacked_per_client_bytes(stacked: Any) -> int:
+    """Per-client payload bytes of a STACKED payload (leaves (m, …)):
+    total bytes divided by the leading client axis."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return 0
+    m = int(leaves[0].shape[0])
+    total = tree_bytes(stacked)
+    assert total % m == 0, (total, m)
+    return total // m
+
+
+def stacked_per_client_elems(stacked: Any) -> int:
+    """Per-client element count of a STACKED payload (leaves (m, …))."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return 0
+    m = int(leaves[0].shape[0])
+    total = tree_elems(stacked)
+    assert total % m == 0, (total, m)
+    return total // m
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundComm:
+    """One round's exact wire traffic, summed over participants."""
+    uplink_bytes: int
+    downlink_bytes: int
+    uplink_elems: int       # dtype-blind count, feeds the deprecated field
+
+    @staticmethod
+    def zero() -> "RoundComm":
+        return RoundComm(0, 0, 0)
+
+
+def round_comm_stacked(payload: Any, n_participants: int) -> RoundComm:
+    """Accounting from ONE stacked payload tree (leaves (m, …), the
+    vmap/shard server layout): only the ``n_participants`` client slices
+    actually cross the wire, up and (mirrored) down."""
+    if payload is None:
+        return RoundComm.zero()
+    per_b = stacked_per_client_bytes(payload)
+    per_e = stacked_per_client_elems(payload)
+    return RoundComm(n_participants * per_b, n_participants * per_b,
+                     n_participants * per_e)
+
+
+def round_comm_payloads(payloads: Any) -> RoundComm:
+    """Accounting from a list of per-participant payload trees (the loop
+    server layout).  ``None`` entries (non-communicating strategies) are
+    free."""
+    if payloads is None:
+        return RoundComm.zero()
+    up_b = sum(tree_bytes(p) for p in payloads if p is not None)
+    up_e = sum(tree_elems(p) for p in payloads if p is not None)
+    return RoundComm(up_b, up_b, up_e)
+
+
+def client_payload_bytes(strategy, state: Any) -> int:
+    """Wire bytes of ONE client's uplink under ``strategy`` (0 when the
+    strategy never communicates)."""
+    p = strategy.uplink(state)
+    return 0 if p is None else tree_bytes(p)

@@ -9,8 +9,21 @@ dataset similarity S^data (eqns 5–6) is computed before round 0 and the
 model similarity S^model (eqns 7–9, CKA over the transmitted C) each round;
 their sum (eqn 4) drives the personalized weights.
 
-Communication is accounted exactly (floats up per client per round), which
-is the paper's Table III metric.
+Communication is accounted exactly — dtype-aware uplink/downlink BYTES
+measured from the real payload pytrees (:mod:`repro.core.comm`), which is
+the paper's Table III metric.
+
+Partial participation (``FedConfig.participation`` / ``sampler`` /
+``straggler_frac``, see :mod:`repro.core.sampling` and DESIGN.md §8): each
+round the server samples a client subset; a deterministic straggler model
+may drop some of them after local fit.  Sampled clients train (the
+vectorized paths run the batched local fit for all m and mask the result,
+keeping the compiled program static); only the post-straggler participants
+uplink, aggregate (renormalized over the participant subset), and receive
+a downlink — everyone else's state is frozen for the round, and S^model
+rows for absentees reuse their last refresh.  With ``participation=1.0``
+and stragglers off the runtime is bit-for-bit the full-participation
+program (asserted in tests/test_sampling.py).
 
 Client parallelism (``FedConfig.client_parallelism``)
 -----------------------------------------------------
@@ -46,14 +59,15 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, client_batch, tri_lora
-from repro.core.baselines import Strategy, count_floats, get_strategy
+from repro.core import aggregation, client_batch, comm, sampling, tri_lora
+from repro.core.baselines import Strategy, get_strategy
 from repro.core.fed_model import FedTask
 from repro.core.similarity import cka, gmm, ot
 from repro.data.pipeline import Loader
@@ -77,6 +91,10 @@ class FedConfig:
     seed: int = 0
     # --- client dispatch: "loop" (reference) | "vmap" | "shard" ------------
     client_parallelism: str = "vmap"
+    # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
+    participation: float = 1.0        # fraction of clients sampled per round
+    sampler: str = "uniform"          # "uniform" | "weighted" | "round_robin"
+    straggler_frac: float = 0.0       # sampled clients dropped after local fit
     # --- CE-LoRA similarity knobs (§III-C) ---------------------------------
     gmm_components: int = 2
     gmm_iters: int = 15
@@ -93,10 +111,24 @@ class FedConfig:
 @dataclasses.dataclass
 class RoundRecord:
     round: int
-    train_loss: float
-    accs: list            # per-client test accuracy
-    uplink_floats: int    # total floats sent up this round
+    train_loss: float     # mean local loss over the SAMPLED clients
+    accs: list            # per-client test accuracy (all m, every round)
+    uplink_bytes: int     # exact payload bytes up this round (participants)
+    downlink_bytes: int   # exact payload bytes down this round
     wall_s: float
+    participants: list = dataclasses.field(default_factory=list)  # completed
+    sampled: list = dataclasses.field(default_factory=list)
+    dropped: list = dataclasses.field(default_factory=list)       # stragglers
+    uplink_elems: int = 0  # dtype-blind element count (legacy unit)
+
+    @property
+    def uplink_floats(self) -> int:
+        """Deprecated pre-byte-accounting field: dtype-blind element count.
+        Use ``uplink_bytes`` / ``downlink_bytes`` (repro.core.comm)."""
+        warnings.warn("RoundRecord.uplink_floats is deprecated; use "
+                      "uplink_bytes/downlink_bytes", DeprecationWarning,
+                      stacklevel=2)
+        return self.uplink_elems
 
     @property
     def mean_acc(self):
@@ -190,7 +222,14 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     if mode not in PARALLELISM_MODES:
         raise ValueError(f"client_parallelism={mode!r}; "
                          f"expected one of {PARALLELISM_MODES}")
+    if fed.sampler not in sampling.SAMPLERS:
+        raise ValueError(f"sampler={fed.sampler!r}; "
+                         f"expected one of {sampling.SAMPLERS}")
     m = fed.n_clients
+    sampling.n_sampled(m, fed.participation)      # validates participation
+    if not 0.0 <= fed.straggler_frac < 1.0:
+        raise ValueError(f"straggler_frac must be in [0, 1); "
+                         f"got {fed.straggler_frac}")
     assert len(client_train) == m
     key = jax.random.key(fed.seed)
     ckeys = jax.random.split(key, m)
@@ -199,6 +238,15 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                for i in range(m)]
     sample_counts = [len(d["labels"]) for d in client_train]
     opt = adamw(lr=fed.lr)
+
+    # ---- per-round participation plans (deterministic in fed.seed; computed
+    # up front so all three parallelism modes consume the identical subsets)
+    partial = fed.participation < 1.0 or fed.straggler_frac > 0.0
+    plans = [sampling.build_plan(fed.sampler, m, fed.participation,
+                                 fed.straggler_frac, rnd, fed.seed,
+                                 sample_counts) if partial
+             else sampling.full_plan(m, rnd)
+             for rnd in range(fed.rounds)]
 
     # ---- local fit: `local_steps` optimizer steps over stacked batches
     # (Alg. 1 line 3).  Written per-client; the vectorized paths vmap it
@@ -281,25 +329,49 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     if strategy.aggregate == "personalized" and fed.use_data_sim:
         s_data = data_similarity(task, fed, client_train)
 
-    def personalized(weighted_payload_src):
-        """Eqn (3) weights from S = S^data (+ S^model this round)."""
+    # ---- S^model: CKA over the clients' Cs.  Under partial participation
+    # only rows/cols of clients whose C changed this round (the SAMPLED set
+    # — stragglers train locally too) are refreshed; unsampled pairs reuse
+    # the cache, which stays exact because both Cs are frozen.  Consumed
+    # entries are participant×participant (absent columns are masked out of
+    # the weights), so the server only ever acts on Cs it was sent.  With
+    # everyone sampled the refresh IS the full legacy computation, bit for
+    # bit.
+    s_model_prev: list = [None]
+
+    def model_sim_from_cs(cs, plan):
+        s_model_prev[0] = cka.refresh_pairwise_cka(
+            s_model_prev[0], cs, plan.sampled,
+            jax.random.key(fed.seed + 97), fed.cka_probes)
+        return s_model_prev[0]
+
+    def personalized(model_sim_src, participants=None):
+        """Eqn (3) weights from S = S^data (+ S^model this round), columns
+        restricted to this round's participants when a mask is given."""
         sims = []
         if fed.use_data_sim and s_data is not None:
             sims.append(jnp.asarray(s_data))
         if fed.use_model_sim:
-            sims.append(weighted_payload_src())
+            sims.append(model_sim_src())
         assert sims, "celora needs at least one similarity term"
-        return aggregation.personalized_weights(sum(sims), fed.self_weight)
+        return aggregation.personalized_weights(sum(sims), fed.self_weight,
+                                                participants)
 
     history: list[RoundRecord] = []
 
     if mode == "loop":
         # ---- reference path: one dispatch per client per round
         for rnd in range(fed.rounds):
+            plan = plans[rnd]
             t0 = time.time()
+            in_sample = plan.mask(m, which="sampled")
             losses = []
             for i in range(m):
+                # ALWAYS draw — keeps per-client data RNG streams aligned
+                # with the vectorized paths and across participation rates
                 bt = list(loaders[i].batches(fed.local_steps))
+                if not in_sample[i]:
+                    continue                    # unsampled: frozen this round
                 toks = jnp.asarray(np.stack([b["tokens"] for b in bt]))
                 labs = jnp.asarray(np.stack([b["labels"] for b in bt]))
                 tr = strategy.trainable(states[i])
@@ -309,22 +381,27 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                 states[i] = strategy.after_local(states[i], fed.pfedme_eta)
                 losses.append(float(loss))
 
+            cmask = jnp.asarray(plan.mask(m)) if partial else None
+            # uplink trees for all m (a local op; absentees carry their
+            # last-uploaded value) — masks below zero out the absent columns
             payloads = [strategy.uplink(s) for s in states]
-            up_floats = sum(strategy.uplink_floats(s) for s in states)
+            rc = comm.round_comm_payloads(
+                [payloads[i] for i in plan.participants])
             weights = None
             if strategy.aggregate == "personalized":
-                weights = personalized(lambda: cka.pairwise_model_similarity(
-                    [tri_lora.tree_payload(s["adapter"]) for s in states],
-                    jax.random.key(fed.seed + 97), fed.cka_probes))
+                weights = personalized(lambda: model_sim_from_cs(
+                    cka.stack_client_cs(
+                        [tri_lora.tree_payload(s["adapter"])
+                         for s in states]), plan), cmask)
             downs = strategy.server(payloads, sample_counts=sample_counts,
-                                    weights=weights)
-            states = [strategy.install(s, d) for s, d in zip(states, downs)]
+                                    weights=weights, participants=cmask)
+            for i in plan.participants:
+                states[i] = strategy.install(states[i], downs[i])
 
             accs = [float(eval_fn(strategy.trainable(states[i]),
                                   test_toks[i], test_labs[i]))
                     for i in range(m)]
-            history.append(RoundRecord(rnd, float(np.mean(losses)), accs,
-                                       up_floats, time.time() - t0))
+            history.append(_round_record(rnd, losses, accs, rc, plan, t0))
             if verbose:
                 _print_round(strategy, history[-1])
     else:
@@ -339,33 +416,51 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             put = lambda t: t
 
         for rnd in range(fed.rounds):
+            plan = plans[rnd]
             t0 = time.time()
             toks, labs = client_batch.stack_client_batches(loaders,
                                                            fed.local_steps)
             tr = strategy.trainable(stacked)
             w_ref = stacked.get("w", {})
+            # the batched program always trains all m (static shapes); under
+            # partial participation the unsampled clients' results are
+            # discarded by the select below, freezing their state exactly
             tr, losses = local_fit(tr, w_ref, put(toks), put(labs))
-            stacked.update(tr)
-            stacked = strategy.after_local(stacked, fed.pfedme_eta)
+            if partial:
+                prev = dict(stacked)
+                stacked.update(tr)
+                stacked = strategy.after_local(stacked, fed.pfedme_eta)
+                stacked = client_batch.select_clients(
+                    jnp.asarray(plan.mask(m, which="sampled")), stacked, prev)
+            else:
+                stacked.update(tr)
+                stacked = strategy.after_local(stacked, fed.pfedme_eta)
 
             payload = strategy.uplink(stacked)       # stacked tree or None
-            up_floats = 0 if payload is None else count_floats(payload)
+            rc = comm.round_comm_stacked(payload, plan.n_participants)
+            cmask = jnp.asarray(plan.mask(m)) if partial else None
             weights = None
             if strategy.aggregate == "personalized":
-                weights = personalized(
-                    lambda: cka.pairwise_model_similarity_stacked(
-                        tri_lora.tree_payload(stacked["adapter"]),
-                        jax.random.key(fed.seed + 97), fed.cka_probes))
+                weights = personalized(lambda: model_sim_from_cs(
+                    cka.stacked_cs(tri_lora.tree_payload(stacked["adapter"])),
+                    plan), cmask)
             down = strategy.server_stacked(payload,
                                            sample_counts=sample_counts,
-                                           weights=weights)
-            stacked = strategy.install(stacked, down)
+                                           weights=weights,
+                                           participants=cmask)
+            if partial and down is not None:
+                installed = strategy.install(stacked, down)
+                stacked = client_batch.select_clients(cmask, installed,
+                                                      stacked)
+            else:
+                stacked = strategy.install(stacked, down)
 
             accs_arr = eval_fn(strategy.trainable(stacked),
                                test_toks, test_labs)
             accs = [float(a) for a in np.asarray(accs_arr)]
-            history.append(RoundRecord(rnd, float(np.mean(losses)), accs,
-                                       up_floats, time.time() - t0))
+            round_losses = np.asarray(losses)[plan.sampled]
+            history.append(_round_record(rnd, round_losses, accs, rc,
+                                         plan, t0))
             if verbose:
                 _print_round(strategy, history[-1])
         states = client_batch.unstack_states(stacked)
@@ -377,12 +472,26 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         "mean_acc": history[-1].mean_acc,
         "min_acc": history[-1].min_acc,
         "max_acc": history[-1].max_acc,
-        "uplink_floats_per_round": history[-1].uplink_floats,
+        "uplink_floats_per_round": history[-1].uplink_elems,  # legacy unit
+        "uplink_bytes_per_round": history[-1].uplink_bytes,
+        "downlink_bytes_per_round": history[-1].downlink_bytes,
         "states": states,
     }
+
+
+def _round_record(rnd: int, losses, accs: list, rc: comm.RoundComm,
+                  plan: sampling.ParticipationPlan, t0: float) -> RoundRecord:
+    return RoundRecord(
+        rnd, float(np.mean(losses)), accs,
+        uplink_bytes=rc.uplink_bytes, downlink_bytes=rc.downlink_bytes,
+        wall_s=time.time() - t0,
+        participants=plan.participants.tolist(),
+        sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
+        uplink_elems=rc.uplink_elems)
 
 
 def _print_round(strategy: Strategy, rec: RoundRecord) -> None:
     print(f"[{strategy.name}] round {rec.round:3d} loss {rec.train_loss:.4f}"
           f" acc {rec.mean_acc:.3f} (min {rec.min_acc:.3f}"
-          f" max {rec.max_acc:.3f}) up {rec.uplink_floats}")
+          f" max {rec.max_acc:.3f}) up {rec.uplink_bytes}B"
+          f" ({len(rec.participants)}/{len(rec.accs)} clients)")

@@ -65,17 +65,20 @@ def stack_client_cs(c_trees: list) -> jnp.ndarray:
     return jnp.stack([flat(t) for t in c_trees])               # (m, M, r, r)
 
 
+def _mean_module_cka(ci_mods: jnp.ndarray, cj_mods: jnp.ndarray,
+                     probes: jnp.ndarray) -> jnp.ndarray:
+    """Mean over adapted modules of per-module CKA — the (i, j) entry of
+    S^model, shared by the full and row-refresh computations."""
+    return jnp.mean(jax.vmap(lambda a, b: cka(a, b, probes))(ci_mods,
+                                                             cj_mods))
+
+
 @functools.partial(jax.jit, static_argnames=("n_probes",))
 def _pairwise_cka_stacked(cs: jnp.ndarray, key: jax.Array,
                           n_probes: int) -> jnp.ndarray:
-    r = cs.shape[-1]
-    probes = jax.random.normal(key, (n_probes, r), jnp.float32)
-
-    def pair(ci_mods, cj_mods):
-        vals = jax.vmap(lambda a, b: cka(a, b, probes))(ci_mods, cj_mods)
-        return jnp.mean(vals)
-
-    return jax.vmap(lambda ci: jax.vmap(lambda cj: pair(ci, cj))(cs))(cs)
+    probes = jax.random.normal(key, (n_probes, cs.shape[-1]), jnp.float32)
+    return jax.vmap(lambda ci: jax.vmap(
+        lambda cj: _mean_module_cka(ci, cj, probes))(cs))(cs)
 
 
 def pairwise_model_similarity(c_trees: list, key: jax.Array,
@@ -99,3 +102,36 @@ def pairwise_model_similarity_stacked(c_tree: Any, key: jax.Array,
                                       n_probes: int = 64) -> jnp.ndarray:
     """S^model (m, m) from a stacked C payload (leaves (m, …, r, r))."""
     return _pairwise_cka_stacked(stacked_cs(c_tree), key, n_probes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probes",))
+def _refresh_rows(prev: jnp.ndarray, cs: jnp.ndarray, ids: jnp.ndarray,
+                  key: jax.Array, n_probes: int) -> jnp.ndarray:
+    probes = jax.random.normal(key, (n_probes, cs.shape[-1]), jnp.float32)
+    rows = jax.vmap(lambda ci: jax.vmap(
+        lambda cj: _mean_module_cka(ci, cj, probes))(cs))(cs[ids])  # (k, m)
+    s = prev.astype(rows.dtype).at[ids, :].set(rows)
+    return s.at[:, ids].set(rows.T)
+
+
+def refresh_pairwise_cka(prev: jnp.ndarray | None, cs: jnp.ndarray,
+                         changed_ids, key: jax.Array,
+                         n_probes: int = 64) -> jnp.ndarray:
+    """Partial-participation S^model update: only the ``changed_ids``
+    clients' Cs moved since the last refresh (this round's SAMPLED set —
+    stragglers train locally too), so only their rows/columns of the cached
+    (m, m) CKA matrix are recomputed; every other pair's Cs are both frozen,
+    so their cached CKA is still exact.  ``cs`` is the full
+    (m, n_modules, r, r) stack of current Cs.
+
+    Entries the aggregation actually consumes are participant×participant
+    (absent columns are masked out of the eqn-3 weights), and participants'
+    Cs are exactly what they uplinked — so the server never acts on a C it
+    was not sent, even though the cache also tracks stragglers' local Cs.
+
+    With no cache yet, or when every client changed, this is exactly the
+    full ``_pairwise_cka_stacked`` computation."""
+    ids = jnp.asarray(changed_ids, jnp.int32)
+    if prev is None or int(ids.shape[0]) == int(cs.shape[0]):
+        return _pairwise_cka_stacked(cs, key, n_probes)
+    return _refresh_rows(prev, cs, ids, key, n_probes)

@@ -1,4 +1,13 @@
-"""Jit'd public wrapper for the fused tri-LoRA projection."""
+"""Jit'd public wrapper for the fused tri-LoRA projection.
+
+``pl.pallas_call`` has no autodiff rule, so the wrapper carries a
+``jax.custom_vjp``: the forward runs the fused kernel; the backward is the
+analytic VJP of y = x@W + s·x@A@C@B as five f32-accumulated GEMM chains
+(every intermediate routed through the rank-r bottleneck, so the extra
+work is O(M·r + r·(d+k)) beyond the two big GEMMs dx/dW).  Gradients for
+all five operands are checked against ``jax.grad`` of the pure-jnp oracle
+in tests/test_kernels.py.
+"""
 from __future__ import annotations
 
 import functools
@@ -18,29 +27,68 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), pad
 
 
+def _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
+    """Fused kernel on the flattened (M, K) input."""
+    n = w.shape[1]
+    # the rank-r pre-projection is tiny (M·r) — plain XLA ops
+    p = scaling * jnp.dot(jnp.dot(x2, a, preferred_element_type=jnp.float32),
+                          c.astype(jnp.float32))
+    p = p.astype(x2.dtype)
+    # pad every dim to tile multiples (kernel requires exact tiling)
+    xp, pad_m = _pad_to(x2, bm, 0)
+    xp, pad_k = _pad_to(xp, bk, 1)
+    wp, _ = _pad_to(w, bk, 0)
+    wp, pad_n = _pad_to(wp, bn, 1)
+    pp, _ = _pad_to(p, bm, 0)
+    bp, _ = _pad_to(b, bn, 1)
+    out = tri_lora_matmul_kernel(xp, wp, pp, bp, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret)
+    return out[:out.shape[0] - pad_m if pad_m else out.shape[0], :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
+    return _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret)
+
+
+def _tri_lora_fwd(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
+    return _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret), \
+        (x2, w, a, c, b)
+
+
+def _tri_lora_bwd(scaling, bm, bn, bk, interpret, res, g):
+    """Analytic VJP of y = x@W + s·x@A@C@B (f32 accumulation throughout;
+    cotangents cast back to each operand's dtype — mirrors the forward's
+    accumulate-in-f32 / store-in-operand-dtype convention)."""
+    x2, w, a, c, b = res
+    f32 = jnp.float32
+    dot = functools.partial(jnp.dot, preferred_element_type=f32)
+    gf, xf = g.astype(f32), x2.astype(f32)
+    af, cf, bf = a.astype(f32), c.astype(f32), b.astype(f32)
+    gb = dot(gf, bf.T)                      # (M, r)   ∂y/∂(x A C)
+    xa = dot(xf, af)                        # (M, r)
+    dx = dot(gf, w.astype(f32).T) + scaling * dot(dot(gb, cf.T), af.T)
+    dw = dot(xf.T, gf)
+    da = scaling * dot(xf.T, dot(gb, cf.T))
+    dc = scaling * dot(xa.T, gb)
+    db = scaling * dot(dot(xa, cf).T, gf)
+    return (dx.astype(x2.dtype), dw.astype(w.dtype), da.astype(a.dtype),
+            dc.astype(c.dtype), db.astype(b.dtype))
+
+
+_tri_lora.defvjp(_tri_lora_fwd, _tri_lora_bwd)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("scaling", "interpret", "bm", "bn", "bk"))
 def tri_lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
                     c: jnp.ndarray, b: jnp.ndarray, scaling: float = 1.0,
                     *, bm: int = 256, bn: int = 256, bk: int = 512,
                     interpret: bool = False) -> jnp.ndarray:
-    """Fused y = x@W + scaling·x@A@C@B.  x may have leading batch dims."""
+    """Fused y = x@W + scaling·x@A@C@B.  x may have leading batch dims.
+    Differentiable in all five array operands (custom VJP above)."""
     *lead, k = x.shape
     n = w.shape[1]
     x2 = x.reshape(-1, k)
-    # the rank-r pre-projection is tiny (M·r) — plain XLA ops
-    p = scaling * jnp.dot(jnp.dot(x2, a, preferred_element_type=jnp.float32),
-                          c.astype(jnp.float32))
-    p = p.astype(x.dtype)
-    # pad every dim to tile multiples (kernel requires exact tiling)
-    x2, pad_m = _pad_to(x2, bm, 0)
-    x2, pad_k = _pad_to(x2, bk, 1)
-    wp, _ = _pad_to(w, bk, 0)
-    wp, pad_n = _pad_to(wp, bn, 1)
-    pp, _ = _pad_to(p, bm, 0)
-    bp, _ = _pad_to(b, bn, 1)
-    out = tri_lora_matmul_kernel(x2, wp, pp, bp, bm=bm, bn=bn, bk=bk,
-                                 interpret=interpret)
-    out = out[:out.shape[0] - pad_m if pad_m else out.shape[0],
-              :n]
+    out = _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret)
     return out.reshape(*lead, n)

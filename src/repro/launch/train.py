@@ -15,6 +15,14 @@ Like the classification runtime (`repro.core.federated`, DESIGN.md §6),
 client dispatch is selectable: ``client_parallelism="vmap"`` (default)
 stacks all clients' adapters on a leading client axis and runs ONE batched
 local fit per round; ``"loop"`` is the one-dispatch-per-client reference.
+
+Partial participation (DESIGN.md §8): ``--participation``, ``--sampler``
+and ``--straggler-frac`` plug the deterministic sampling plan of
+:mod:`repro.core.sampling` into the LM driver — unsampled clients keep
+their adapters frozen for the round, aggregation renormalizes over the
+post-straggler participants, and the reported communication is the exact
+per-round uplink/downlink BYTES of the participants' payloads
+(:mod:`repro.core.comm`).
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save
-from repro.core import aggregation, client_batch, tri_lora
+from repro.core import aggregation, client_batch, comm, sampling, tri_lora
 from repro.core.similarity import cka
 from repro.data import synthetic
 from repro.models import model
@@ -38,9 +46,16 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         local_steps: int = 20, batch: int = 8, seq: int = 256,
         lr: float = 3e-3, seed: int = 0, method: str = "celora",
         ckpt: str | None = None, verbose: bool = True,
-        reduced: bool = False, client_parallelism: str = "vmap") -> dict:
+        reduced: bool = False, client_parallelism: str = "vmap",
+        participation: float = 1.0, sampler: str = "uniform",
+        straggler_frac: float = 0.0) -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
     vectorized = client_parallelism == "vmap"
+    partial = participation < 1.0 or straggler_frac > 0.0
+    sampling.n_sampled(clients, participation)    # validates participation
+    if not 0.0 <= straggler_frac < 1.0:
+        raise ValueError(f"straggler_frac must be in [0, 1); "
+                         f"got {straggler_frac}")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -83,61 +98,91 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         return (np.stack([b["tokens"] for b in bs]),
                 np.stack([b["labels"] for b in bs]))
 
+    # weighted sampling sees the true per-client stream sizes (the
+    # synthetic LM streams are equal-sized, so it coincides with uniform
+    # here — heterogeneous shards would differentiate it)
+    stream_sizes = [len(s) for s in streams]
+
     history = []
     for rnd in range(rounds):
         t0 = time.time()
+        plan = (sampling.build_plan(sampler, clients, participation,
+                                    straggler_frac, rnd, seed,
+                                    sample_counts=stream_sizes)
+                if partial else sampling.full_plan(clients, rnd))
+        smask = plan.mask(clients, which="sampled")
+        cmask = jnp.asarray(plan.mask(clients)) if partial else None
         if vectorized:
-            drawn = [_draw(i) for i in range(clients)]
+            drawn = [_draw(i) for i in range(clients)]  # all: rng parity
             toks = jnp.asarray(np.stack([d[0] for d in drawn]))
             labs = jnp.asarray(np.stack([d[1] for d in drawn]))
-            stacked, ls = local_fit(stacked, toks, labs)   # ls (m, steps)
-            losses = [float(l) for l in np.asarray(ls[:, -1])]
+            new_stacked, ls = local_fit(stacked, toks, labs)  # ls (m, steps)
+            stacked = (client_batch.select_clients(jnp.asarray(smask),
+                                                   new_stacked, stacked)
+                       if partial else new_stacked)
+            losses = [float(l) for l in np.asarray(ls[:, -1])[plan.sampled]]
         else:
             losses = []
             for i in range(clients):
                 toks, labs = (jnp.asarray(a) for a in _draw(i))
+                if not smask[i]:
+                    continue                # unsampled: frozen this round
                 adapters[i], ls = local_fit(adapters[i], toks, labs)
                 losses.append(float(ls[-1]))
 
-        up_floats = 0
+        rc = comm.RoundComm.zero()
         if method == "celora":
             if vectorized:
                 payload = tri_lora.tree_payload(stacked)
-                up_floats = sum(int(c.size) for c in jax.tree.leaves(payload))
+                rc = comm.round_comm_stacked(payload, plan.n_participants)
                 s_model = cka.pairwise_model_similarity_stacked(
                     payload, jax.random.key(seed + 99), 32)
-                w = aggregation.personalized_weights(s_model)
+                w = aggregation.personalized_weights(s_model,
+                                                     participants=cmask)
                 mixed = aggregation.aggregate_stacked(payload, w)
-                stacked = tri_lora.tree_load_payload(stacked, mixed)
+                installed = tri_lora.tree_load_payload(stacked, mixed)
+                stacked = (client_batch.select_clients(cmask, installed,
+                                                       stacked)
+                           if partial else installed)
             else:
                 payloads = [tri_lora.tree_payload(a) for a in adapters]
-                up_floats = clients * sum(int(c.size)
-                                          for c in jax.tree.leaves(payloads[0]))
+                rc = comm.round_comm_payloads(
+                    [payloads[i] for i in plan.participants])
                 s_model = cka.pairwise_model_similarity(
                     payloads, jax.random.key(seed + 99), 32)
-                w = aggregation.personalized_weights(s_model)
+                w = aggregation.personalized_weights(s_model,
+                                                     participants=cmask)
                 downs = aggregation.aggregate_payloads(payloads, w)
-                adapters = [tri_lora.tree_load_payload(a, d)
-                            for a, d in zip(adapters, downs)]
+                for i in plan.participants:
+                    adapters[i] = tri_lora.tree_load_payload(adapters[i],
+                                                             downs[i])
         elif method == "fedavg":
             if vectorized:
-                up_floats = sum(int(x.size) for x in jax.tree.leaves(stacked))
-                g = aggregation.fedavg_stacked(stacked, [1] * clients)
-                stacked = client_batch.broadcast_to_clients(g, clients)
+                rc = comm.round_comm_stacked(stacked, plan.n_participants)
+                g = aggregation.fedavg_stacked(stacked, [1] * clients, cmask)
+                bc = client_batch.broadcast_to_clients(g, clients)
+                stacked = (client_batch.select_clients(cmask, bc, stacked)
+                           if partial else bc)
             else:
                 payloads = [jax.tree.map(lambda x: x, a) for a in adapters]
-                up_floats = clients * sum(int(x.size)
-                                          for x in jax.tree.leaves(adapters[0]))
-                g = aggregation.fedavg(payloads, [1] * clients)
-                adapters = [jax.tree.map(lambda x: x, g)
-                            for _ in range(clients)]
+                rc = comm.round_comm_payloads(
+                    [payloads[i] for i in plan.participants])
+                g = aggregation.fedavg(payloads, [1] * clients, cmask)
+                for i in plan.participants:
+                    adapters[i] = jax.tree.map(lambda x: x, g)
 
         rec = {"round": rnd, "loss": float(np.mean(losses)),
-               "uplink_floats": up_floats, "wall_s": time.time() - t0}
+               "uplink_floats": rc.uplink_elems,
+               "uplink_bytes": rc.uplink_bytes,
+               "downlink_bytes": rc.downlink_bytes,
+               "participants": plan.participants.tolist(),
+               "wall_s": time.time() - t0}
         history.append(rec)
         if verbose:
             print(f"round {rnd:3d}  loss {rec['loss']:.4f}  "
-                  f"uplink {up_floats}  {rec['wall_s']:.1f}s", flush=True)
+                  f"uplink {rc.uplink_bytes}B "
+                  f"({plan.n_participants}/{clients} clients)  "
+                  f"{rec['wall_s']:.1f}s", flush=True)
 
     if vectorized:
         adapters = client_batch.unstack_states(stacked)
@@ -165,12 +210,20 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--client-parallelism", default="vmap",
                     choices=["loop", "vmap"])
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round (0, 1]")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "weighted", "round_robin"])
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of sampled clients dropped after local fit")
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
               lr=args.lr, method=args.method, ckpt=args.ckpt,
               reduced=args.reduced,
-              client_parallelism=args.client_parallelism)
+              client_parallelism=args.client_parallelism,
+              participation=args.participation, sampler=args.sampler,
+              straggler_frac=args.straggler_frac)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

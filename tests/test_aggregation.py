@@ -23,6 +23,64 @@ def test_personalized_weights_prefer_similar():
     assert w[2, 0] == w[2, 1]
 
 
+def test_personalized_weights_degenerate_row_uniform_fallback():
+    """Regression: a client whose off-diagonal similarities are all ≤ 0 used
+    to get a ~zero row (1e-12-clamped denominator) that wiped its aggregated
+    C.  It must fall back to uniform-over-others instead."""
+    s = jnp.asarray([[0., -1., -2.],
+                     [-1., 0., 5.],
+                     [-2., 5., 0.]])
+    w = np.asarray(aggregation.personalized_weights(s))
+    np.testing.assert_allclose(w[0], [0.0, 0.5, 0.5], atol=1e-6)   # uniform
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)           # all rows
+    np.testing.assert_allclose(w[1], [0.0, 0.0, 1.0], atol=1e-6)
+
+
+def test_personalized_weights_all_degenerate_still_simplex():
+    s = jnp.zeros((4, 4))
+    w = np.asarray(aggregation.personalized_weights(s))
+    np.testing.assert_allclose(w, (1 - np.eye(4)) / 3, atol=1e-6)
+
+
+def test_personalized_weights_single_client_keeps_self():
+    """With no eligible others the row degrades to identity, never zero."""
+    w = np.asarray(aggregation.personalized_weights(jnp.zeros((1, 1))))
+    np.testing.assert_allclose(w, [[1.0]], atol=1e-6)
+
+
+def test_personalized_weights_participant_mask():
+    """Partial participation: absent columns carry no weight and rows
+    renormalize over the participants."""
+    s = jnp.ones((4, 4))
+    mask = jnp.asarray([True, True, False, True])
+    w = np.asarray(aggregation.personalized_weights(s, participants=mask))
+    np.testing.assert_allclose(w[:, 2], 0.0, atol=1e-6)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w[0], [0.0, 0.5, 0.0, 0.5], atol=1e-6)
+    # sole participant: identity fallback, not a zero row
+    solo = jnp.asarray([False, True, False, False])
+    w1 = np.asarray(aggregation.personalized_weights(s, participants=solo))
+    np.testing.assert_allclose(w1[1], [0.0, 1.0, 0.0, 0.0], atol=1e-6)
+
+
+def test_fedavg_participant_mask_renormalizes():
+    payloads = [{"c": jnp.full((2,), float(i))} for i in range(3)]
+    mask = jnp.asarray([True, False, True])
+    g = aggregation.fedavg(payloads, [1, 100, 3], mask)
+    np.testing.assert_allclose(np.asarray(g["c"]), 1.5, atol=1e-6)  # (0+3·2)/4
+
+
+def test_fedavg_zero_count_participants_uniform_not_nan():
+    """Regression: a round sampling only empty-shard clients (all masked
+    counts zero) must degrade to a uniform mean, never 0/0 = NaN."""
+    payloads = [{"c": jnp.full((2,), float(i))} for i in range(3)]
+    mask = jnp.asarray([True, False, True])
+    g = aggregation.fedavg(payloads, [0, 100, 0], mask)
+    np.testing.assert_allclose(np.asarray(g["c"]), 1.0, atol=1e-6)  # (0+2)/2
+    g2 = aggregation.fedavg(payloads, [0, 0, 0])
+    np.testing.assert_allclose(np.asarray(g2["c"]), 1.0, atol=1e-6)
+
+
 def test_self_weight_extension():
     s = jnp.ones((3, 3))
     w = np.asarray(aggregation.personalized_weights(s, self_weight=0.3))

@@ -99,7 +99,8 @@ def test_vmap_matches_loop(fed_setup, method):
     assert abs(ref["mean_acc"] - vec["mean_acc"]) < 1e-3
     for r_ref, r_vec in zip(ref["history"], vec["history"]):
         assert abs(r_ref.train_loss - r_vec.train_loss) < 1e-4
-        assert r_ref.uplink_floats == r_vec.uplink_floats
+        assert r_ref.uplink_bytes == r_vec.uplink_bytes
+        assert r_ref.uplink_elems == r_vec.uplink_elems
         np.testing.assert_allclose(r_ref.accs, r_vec.accs, atol=1e-3)
     # final states agree leaf-by-leaf (same math modulo fp reassociation)
     for s_ref, s_vec in zip(ref["states"], vec["states"]):

@@ -30,6 +30,20 @@ def test_train_driver_fedavg_variant():
     assert np.isfinite(out["history"][-1]["loss"])
 
 
+def test_train_driver_partial_participation():
+    """LM driver under client sampling: half the clients per round, byte
+    accounting scales with the participant count."""
+    out = train_run(arch="fed-100m", clients=4, rounds=2, local_steps=3,
+                    batch=4, seq=64, method="celora", verbose=False,
+                    reduced=True, participation=0.5)
+    for h in out["history"]:
+        assert len(h["participants"]) == 2
+        assert h["uplink_bytes"] > 0
+        assert h["uplink_bytes"] == h["downlink_bytes"]
+        assert h["uplink_bytes"] == h["uplink_floats"] * 4  # f32 payload
+    assert np.isfinite(out["history"][-1]["loss"])
+
+
 def test_generate_shapes_and_determinism():
     cfg = get_config("fed-100m").reduced()
     params = model.init_params(cfg, jax.random.key(0))

@@ -11,7 +11,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import aggregation, tri_lora
+from repro.core import aggregation, sampling, tri_lora
 from repro.core.similarity import ot
 from repro.models.attention import blockwise_sdpa, sdpa
 
@@ -79,6 +79,82 @@ def test_blockwise_attention_matches_reference(sq, window, seed):
     out = blockwise_sdpa(q, k, v, causal=True, window=window, bq=16, bk=16)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 500))
+def test_personalized_weights_permutation_equivariant(m, seed):
+    """Relabeling clients permutes the weight matrix: W(PSPᵀ) = P·W(S)·Pᵀ —
+    for ANY symmetric similarity, including negative and degenerate rows
+    (which exercise the uniform fallback)."""
+    rng = np.random.default_rng(seed)
+    s = rng.standard_normal((m, m))
+    s = s + s.T                                     # symmetric, mixed signs
+    if seed % 3 == 0:
+        s[0, :] = s[:, 0] = -1.0                    # force a degenerate row
+        np.fill_diagonal(s, 0.0)
+    perm = rng.permutation(m)
+    w = np.asarray(aggregation.personalized_weights(jnp.asarray(s)))
+    w_p = np.asarray(aggregation.personalized_weights(
+        jnp.asarray(s[np.ix_(perm, perm)])))
+    np.testing.assert_allclose(w_p, w[np.ix_(perm, perm)], atol=1e-5)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)   # row-stochastic
+    assert np.all(w >= -1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 99))
+def test_stacked_aggregators_equal_list_forms(m, seed):
+    """fedavg_stacked ≡ fedavg and aggregate_stacked ≡ aggregate_payloads
+    on random pytrees (per-leaf shapes vary)."""
+    rng = np.random.default_rng(seed)
+    payloads = [{"c": jnp.asarray(rng.standard_normal((3, 3)), jnp.float32),
+                 "nest": {"b": jnp.asarray(rng.standard_normal(5),
+                                           jnp.float32)}} for _ in range(m)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    counts = rng.integers(1, 40, m).tolist()
+    g_list = aggregation.fedavg(payloads, counts)
+    g_stk = aggregation.fedavg_stacked(stacked, counts)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), g_list, g_stk)
+    w = jnp.asarray(rng.random((m, m)), jnp.float32)
+    mixed_list = aggregation.aggregate_payloads(payloads, w)
+    mixed_stk = aggregation.aggregate_stacked(stacked, w)
+    for i in range(m):
+        jax.tree.map(lambda a, b, i=i: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b[i]), rtol=1e-6, atol=1e-6),
+            mixed_list[i], mixed_stk)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(sampling.SAMPLERS), st.integers(2, 12),
+       st.integers(0, 30), st.integers(0, 1000))
+def test_samplers_seed_deterministic_and_valid(sampler, m, rnd, seed):
+    counts = list(range(1, m + 1))
+    k = max(1, m // 2)
+    a = sampling.sample_clients(sampler, m, k, rnd, seed, counts)
+    b = sampling.sample_clients(sampler, m, k, rnd, seed, counts)
+    np.testing.assert_array_equal(a, b)             # seed-deterministic
+    assert a.size == k == np.unique(a).size
+    assert np.all((0 <= a) & (a < m))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 50))
+def test_samplers_permutation_fair(m, seed):
+    """round_robin: EXACT fairness (k visits each over m rounds).  uniform:
+    every client is hit over many rounds (miss probability ≈ (1-k/m)^200)."""
+    k = max(1, m // 2)
+    visits = np.zeros(m, int)
+    for rnd in range(m):
+        visits[sampling.sample_clients("round_robin", m, k, rnd, seed)] += 1
+    np.testing.assert_array_equal(visits, k)
+    hit = np.zeros(m, bool)
+    for rnd in range(200):
+        hit[sampling.sample_clients("uniform", m, k, rnd, seed)] = True
+        if hit.all():
+            break
+    assert hit.all()
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,244 @@
+"""Partial-participation runtime: sampler determinism/fairness, straggler
+model, loop⇄vmap⇄shard parity under a shared sampled subset, frozen
+non-participant state, and the bit-for-bit full-participation guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+
+# ---------------------------------------------------------------------------
+# samplers + straggler model (pure, no runtime)
+# ---------------------------------------------------------------------------
+
+def test_n_sampled_bounds():
+    assert sampling.n_sampled(10, 1.0) == 10
+    assert sampling.n_sampled(10, 0.5) == 5
+    assert sampling.n_sampled(10, 0.01) == 1          # never zero
+    with pytest.raises(ValueError, match="participation"):
+        sampling.n_sampled(10, 0.0)
+    with pytest.raises(ValueError, match="participation"):
+        sampling.n_sampled(10, 1.5)
+
+
+@pytest.mark.parametrize("sampler", sampling.SAMPLERS)
+def test_sampler_seed_deterministic(sampler):
+    counts = list(range(1, 13))
+    for rnd in range(5):
+        a = sampling.sample_clients(sampler, 12, 4, rnd, 7, counts)
+        b = sampling.sample_clients(sampler, 12, 4, rnd, 7, counts)
+        np.testing.assert_array_equal(a, b)
+        assert a.size == 4 and np.unique(a).size == 4
+        assert np.all((0 <= a) & (a < 12))
+        assert np.all(np.diff(a) > 0)                 # sorted, unique
+
+
+def test_uniform_rounds_differ():
+    draws = {tuple(sampling.sample_clients("uniform", 20, 5, rnd, 0))
+             for rnd in range(20)}
+    assert len(draws) > 1                             # not stuck on one subset
+
+
+def test_round_robin_exact_fairness():
+    m, k = 10, 3
+    visits = np.zeros(m, int)
+    for rnd in range(m):                              # k·m slots over m rounds
+        ids = sampling.sample_clients("round_robin", m, k, rnd, 0)
+        visits[ids] += 1
+    np.testing.assert_array_equal(visits, k)          # everyone exactly k times
+
+
+def test_weighted_prefers_large_shards():
+    m = 10
+    counts = [1] * (m - 1) + [1000]
+    hits = sum(m - 1 in sampling.sample_clients("weighted", m, 2, rnd, 3,
+                                                counts)
+               for rnd in range(50))
+    assert hits > 45                                  # the big shard ~always in
+
+
+def test_weighted_requires_counts():
+    with pytest.raises(ValueError, match="sample_counts"):
+        sampling.sample_clients("weighted", 4, 2, 0, 0)
+
+
+def test_unknown_sampler_rejected():
+    with pytest.raises(ValueError, match="sampler"):
+        sampling.sample_clients("magic", 4, 2, 0, 0)
+
+
+def test_straggler_determinism_and_floor():
+    sampled = np.arange(8)
+    keep1, drop1 = sampling.drop_stragglers(sampled, 0.5, rnd=3, seed=11)
+    keep2, drop2 = sampling.drop_stragglers(sampled, 0.5, rnd=3, seed=11)
+    np.testing.assert_array_equal(keep1, keep2)
+    np.testing.assert_array_equal(drop1, drop2)
+    assert drop1.size == 4 and keep1.size == 4
+    np.testing.assert_array_equal(np.sort(np.concatenate([keep1, drop1])),
+                                  sampled)
+    # at least one client always completes, however aggressive the drop
+    keep, drop = sampling.drop_stragglers(np.arange(3), 0.99, 0, 0)
+    assert keep.size == 1 and drop.size == 2
+
+
+def test_build_plan_composition():
+    counts = [10] * 10
+    plan = sampling.build_plan("uniform", 10, 0.6, 0.34, rnd=2, seed=5,
+                               sample_counts=counts)
+    assert plan.sampled.size == 6
+    assert plan.dropped.size == 2                     # floor(0.34·6)
+    assert plan.n_participants == 4
+    assert set(plan.participants) | set(plan.dropped) == set(plan.sampled)
+    mask = plan.mask(10)
+    assert mask.sum() == 4 and np.all(mask[plan.participants])
+
+
+def test_full_plan_is_everyone():
+    plan = sampling.full_plan(5, 0)
+    np.testing.assert_array_equal(plan.participants, np.arange(5))
+    assert plan.dropped.size == 0 and plan.n_participants == 5
+
+
+# ---------------------------------------------------------------------------
+# end-to-end runtime under partial participation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+def _run(fed_setup, method, parallelism, rounds=2, **kw):
+    task, ctrain, ctest, m = fed_setup
+    fed = FedConfig(method=method, n_clients=m, rounds=rounds, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, client_parallelism=parallelism, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+@pytest.mark.parametrize("method", ["celora", "fedpetuning", "pfedme_lora",
+                                    "fdlora"])
+def test_partial_loop_vmap_parity(fed_setup, method):
+    """Same seed ⇒ same sampled subset ⇒ identical round results."""
+    kw = dict(participation=0.5, straggler_frac=0.0, seed=3)
+    ref = _run(fed_setup, method, "loop", **kw)
+    vec = _run(fed_setup, method, "vmap", **kw)
+    for r_ref, r_vec in zip(ref["history"], vec["history"]):
+        assert r_ref.sampled == r_vec.sampled
+        assert r_ref.participants == r_vec.participants
+        assert r_ref.uplink_bytes == r_vec.uplink_bytes
+        assert r_ref.downlink_bytes == r_vec.downlink_bytes
+        assert abs(r_ref.train_loss - r_vec.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_vec.accs, atol=1e-3)
+    for s_ref, s_vec in zip(ref["states"], vec["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-4), s_ref, s_vec)
+
+
+@pytest.mark.parametrize("method", ["celora", "pfedme_lora"])
+def test_straggler_loop_vmap_parity(fed_setup, method):
+    """Stragglers train locally but never upload — the loop path's
+    train-then-skip-install and the vmap path's masked select must agree
+    (pfedme_lora exercises the after_local w-update for stragglers)."""
+    kw = dict(participation=1.0, straggler_frac=0.3, seed=1)
+    ref = _run(fed_setup, method, "loop", **kw)
+    vec = _run(fed_setup, method, "vmap", **kw)
+    for r_ref, r_vec in zip(ref["history"], vec["history"]):
+        assert r_ref.dropped == r_vec.dropped and len(r_ref.dropped) == 1
+        assert r_ref.participants == r_vec.participants
+        assert r_ref.uplink_bytes == r_vec.uplink_bytes
+        assert abs(r_ref.train_loss - r_vec.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_vec.accs, atol=1e-3)
+    for s_ref, s_vec in zip(ref["states"], vec["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-4), s_ref, s_vec)
+
+
+def test_partial_shard_matches_vmap(fed_setup):
+    kw = dict(participation=0.5, straggler_frac=0.3, seed=1)
+    vec = _run(fed_setup, "celora", "vmap", **kw)
+    shd = _run(fed_setup, "celora", "shard", **kw)
+    for r_v, r_s in zip(vec["history"], shd["history"]):
+        assert r_v.participants == r_s.participants
+        np.testing.assert_allclose(r_v.accs, r_s.accs, atol=1e-3)
+
+
+@pytest.mark.parametrize("parallelism", ["loop", "vmap"])
+def test_non_participants_frozen(fed_setup, parallelism):
+    """Clients outside the round's sample keep their state bit-for-bit."""
+    task, ctrain, ctest, m = fed_setup
+    fed = FedConfig(method="celora", n_clients=m, rounds=1, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, client_parallelism=parallelism,
+                    participation=0.5, seed=3)
+    out = run_federated(task, fed, ctrain, ctest)
+    rec = out["history"][0]
+    absent = sorted(set(range(m)) - set(rec.sampled))
+    assert absent, "participation=0.5 with m=4 must leave absentees"
+    # rebuild the initial states exactly as the runtime does
+    from repro.core.baselines import get_strategy
+    strategy = get_strategy("celora")
+    ckeys = jax.random.split(jax.random.key(fed.seed), m)
+    for i in absent:
+        init = strategy.init_state(task.init_client(ckeys[i]))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), init, out["states"][i])
+
+
+def test_straggler_trained_but_not_aggregated(fed_setup):
+    """Stragglers keep their local training but send/receive nothing."""
+    out = _run(fed_setup, "celora", "vmap", rounds=2,
+               participation=1.0, straggler_frac=0.3, seed=0)
+    for rec in out["history"]:
+        assert rec.sampled == list(range(4))          # everyone sampled
+        assert len(rec.dropped) == 1                  # floor(0.3·4)
+        assert sorted(rec.participants + rec.dropped) == rec.sampled
+        # comm covers participants only
+        assert rec.uplink_bytes == rec.downlink_bytes
+        per_client = rec.uplink_bytes // len(rec.participants)
+        assert rec.uplink_bytes == per_client * len(rec.participants)
+
+
+@pytest.mark.parametrize("method", ["celora", "fedpetuning", "pfedme_lora"])
+@pytest.mark.parametrize("parallelism", ["loop", "vmap"])
+def test_full_participation_bit_for_bit(fed_setup, method, parallelism):
+    """Acceptance: with participation=1.0 and the straggler model off the
+    runtime is bit-for-bit the pre-partial-participation program.  The
+    masked machinery is forced on with a straggler fraction too small to
+    drop anyone; every float must match the legacy fast path exactly."""
+    ref = _run(fed_setup, method, parallelism)                    # legacy path
+    msk = _run(fed_setup, method, parallelism, straggler_frac=1e-9)
+    for r_ref, r_msk in zip(ref["history"], msk["history"]):
+        assert r_ref.train_loss == r_msk.train_loss
+        assert r_ref.accs == r_msk.accs
+        assert r_ref.uplink_bytes == r_msk.uplink_bytes
+        assert r_ref.uplink_elems == r_msk.uplink_elems
+    for s_ref, s_msk in zip(ref["states"], msk["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_ref, s_msk)
+
+
+def test_bad_participation_config_rejected(fed_setup):
+    with pytest.raises(ValueError, match="participation"):
+        _run(fed_setup, "celora", "vmap", participation=0.0)
+    with pytest.raises(ValueError, match="sampler"):
+        _run(fed_setup, "celora", "vmap", sampler="psychic")
+    # a sign typo must raise, not silently disable the straggler model
+    with pytest.raises(ValueError, match="straggler_frac"):
+        _run(fed_setup, "celora", "vmap", straggler_frac=-0.3)
