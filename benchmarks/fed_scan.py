@@ -1,0 +1,110 @@
+"""Rounds/sec: eager vs compiled scan federated engine (DESIGN.md §9).
+
+The eager engine dispatches ~10 separate programs per round (local fit,
+masked select, uplink, CKA refresh, eqn-(3) weights, aggregation, install,
+eval) plus per-round host syncs; the scan engine fuses the whole round and
+scans it over chunks, paying one dispatch and one host sync per chunk.
+
+The measured scenario is the regime the engine exists for — many cheap
+rounds: a small synthetic LM-backbone classification task (1-layer d=32
+transformer, rank-4 tri-LoRA, seq 8) federated over m = 10 clients with
+cross-device partial participation (50% sampled, 20% stragglers), where
+CE-LoRA's r×r payload makes the per-round math tiny and the eager
+engine's Python/dispatch overhead dominates.  Rounds/sec comes from the
+per-round ``wall_s`` the runtime records, so one-shot setup is excluded
+for both engines, and both engines are warmed with a one-chunk run first.
+
+Usage:  PYTHONPATH=src python benchmarks/fed_scan.py [--quick] [--json F]
+
+Prints CSV (engine,rounds,rounds_per_sec,final_mean_acc) plus the
+speedup; the full (non ``--quick``) run asserts speedup >= 2x.  With
+``--json`` the results are also written as a machine-readable report
+(uploaded as a CI artifact, see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.core.fed_model import FedTask  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+
+SEQ, VOCAB, N_CLASSES = 8, 256, 6
+
+
+def bench_setup(m: int):
+    cfg = ModelConfig(
+        name="scanbench", family="dense", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=VOCAB, rope_theta=1e4,
+        layer_pattern=("attn",), param_dtype="float32", lora_rank=4)
+    task = FedTask.create(jax.random.key(0), cfg, N_CLASSES)
+    ctrain, ctest, _ = synthetic.make_federated_classification(
+        0, m, 40, 24, SEQ, VOCAB, N_CLASSES, alpha=0.5, drift=1.5,
+        n_groups=3, class_sep=1.2)
+    return task, ctrain, ctest
+
+
+def run_engine(engine: str, task, ctrain, ctest, *, m: int, rounds: int,
+               chunk: int) -> dict:
+    fed = FedConfig(method="celora", n_clients=m, rounds=rounds,
+                    local_steps=1, batch_size=2, lr=1e-2, seed=0,
+                    participation=0.5, straggler_frac=0.2,
+                    use_data_sim=False, cka_probes=8,   # S^model only
+                    engine=engine, chunk_rounds=chunk)
+    out = run_federated(task, fed, ctrain, ctest)
+    wall = sum(r.wall_s for r in out["history"])
+    return {"engine": engine, "rounds": rounds,
+            "rounds_per_sec": rounds / wall, "wall_s": wall,
+            "mean_acc": out["mean_acc"]}
+
+
+def main(quick: bool = False, json_path: str | None = None) -> dict:
+    m = 6 if quick else 10
+    rounds = 10 if quick else 50
+    chunk = 5 if quick else 10             # divides rounds: no ragged chunk
+    task, ctrain, ctest = bench_setup(m)
+
+    print(f"# fed_scan — eager vs scan engine, m={m}, rounds={rounds}, "
+          f"chunk={chunk}, participation=0.5, straggler_frac=0.2")
+    results = {}
+    for engine in ("eager", "scan"):
+        # warm the compilation caches (one chunk's worth of rounds)
+        run_engine(engine, task, ctrain, ctest, m=m, rounds=chunk,
+                   chunk=chunk)
+        results[engine] = run_engine(engine, task, ctrain, ctest, m=m,
+                                     rounds=rounds, chunk=chunk)
+
+    print("engine,rounds,rounds_per_sec,final_mean_acc")
+    for r in results.values():
+        print(f"{r['engine']},{r['rounds']},{r['rounds_per_sec']:.2f},"
+              f"{r['mean_acc']:.3f}")
+    speedup = (results["scan"]["rounds_per_sec"]
+               / results["eager"]["rounds_per_sec"])
+    print(f"# scan/eager speedup: {speedup:.2f}x")
+    report = {"m": m, "rounds": rounds, "chunk_rounds": chunk,
+              "speedup": speedup, **{k: v for k, v in results.items()}}
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {json_path}")
+    if not quick:
+        assert speedup >= 2.0, (
+            f"scan engine speedup {speedup:.2f}x < 2x — the compiled "
+            f"multi-round engine regressed")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="F",
+                    help="write a machine-readable report to F")
+    a = ap.parse_args()
+    main(quick=a.quick, json_path=a.json)

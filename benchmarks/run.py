@@ -41,6 +41,7 @@ def _register():
     import fed_comm
     import fed_partial
     import fed_scale
+    import fed_scan
     import fig5_privacy
     import fig6_alpha
     import fig8_clients
@@ -66,6 +67,7 @@ def _register():
         "fed_comm": fed_comm.main,                # cross-pod bytes (ours)
         "fed_partial": fed_partial.main,          # partial participation (ours)
         "fed_scale": fed_scale.main,              # client-dispatch scaling (ours)
+        "fed_scan": fed_scan.main,                # eager vs scan engine (ours)
         "roofline": _roofline,                    # §Roofline (ours)
     })
 

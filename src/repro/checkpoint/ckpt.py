@@ -46,15 +46,28 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
         packed["__meta__"] = np.frombuffer(
             json.dumps(metadata).encode(), np.uint8)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # write through the OPEN tmp file descriptor: np.savez(filename) appends
+    # ".npz" to names that lack it, which would strand the mkstemp file and
+    # rename a sibling instead — a file object keeps the name exact
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
-    os.close(fd)
-    np.savez(tmp, **packed)
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **packed)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    """Restore into the structure of `like` (shapes/dtypes validated).
+
+    Mismatches raise ``KeyError`` / ``ValueError`` with the offending leaf
+    path — restoring a checkpoint into the wrong model/run configuration
+    must fail loudly, not with a bare assert (or, worse, silently).
+    """
     with np.load(path) as data:
         dtypes = json.loads(bytes(data["__dtypes__"]).decode())
         flat_like, treedef = compat.tree_flatten_with_path(like)
@@ -62,14 +75,24 @@ def restore(path: str, like: Any) -> Any:
         for pth, leaf in flat_like:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in pth)
+            if key not in data:
+                stored = sorted(k for k in data.files
+                                if not k.startswith("__"))
+                raise KeyError(
+                    f"checkpoint {path!r} has no leaf {key!r}; it stores "
+                    f"{stored[:8]}{'…' if len(stored) > 8 else ''} — the "
+                    f"restore target has a different tree structure")
             arr = data[key]
             if dtypes[key] == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
             want = jnp.asarray(leaf)
-            assert arr.shape == want.shape, (key, arr.shape, want.shape)
+            if arr.shape != want.shape:
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape {arr.shape} but the "
+                    f"restore target expects {want.shape} — the checkpoint "
+                    f"was written for a different model/run configuration")
             leaves.append(jnp.asarray(arr, want.dtype))
-        return jax.tree.unflatten(treedef, [l for _, l in
-                                            zip(flat_like, leaves)])
+        return jax.tree.unflatten(treedef, leaves)
 
 
 def metadata(path: str) -> dict:

@@ -18,6 +18,12 @@ Payload layouts — every aggregator exists in two equivalent forms:
 C payloads (out_i = Σ_j W[i,j]·C_j); ``fedavg`` / ``fedavg_stacked`` are the
 FedPETuning baseline (sample-count weighted mean, one global result).  The
 list forms stack internally and delegate to the stacked forms.
+
+Every function here is pure jnp with no Python branching on array VALUES
+(``participants`` masks and sample counts may be traced arrays), so the
+stacked aggregators trace unchanged inside the compiled multi-round
+engine's ``round_step`` (:mod:`repro.core.fed_engine`, DESIGN.md §9) as
+well as eagerly.
 """
 from __future__ import annotations
 

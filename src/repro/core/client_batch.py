@@ -79,3 +79,26 @@ def stack_client_batches(loaders: Sequence, n_batches: int
         toks.append(np.stack([b["tokens"] for b in bt]))
         labs.append(np.stack([b["labels"] for b in bt]))
     return jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labs))
+
+
+def stack_chunk_batches(loaders: Sequence, n_rounds: int, n_batches: int
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefetch a whole CHUNK of rounds for the compiled scan engine:
+    ``(n_rounds, m, n_batches, B, T)`` tokens / ``(n_rounds, m, n_batches,
+    B)`` labels, one device put per chunk.  ``lax.scan`` consumes the
+    leading round axis one slice per round.
+
+    Draw order is round-major then client-minor — exactly ``n_rounds``
+    successive :func:`stack_client_batches` calls — so the per-client RNG
+    streams stay aligned with the eager engine and the loop path.
+    """
+    tk, lb = [], []
+    for _ in range(n_rounds):
+        rt, rl = [], []
+        for ld in loaders:
+            bt = list(ld.batches(n_batches))
+            rt.append(np.stack([b["tokens"] for b in bt]))
+            rl.append(np.stack([b["labels"] for b in bt]))
+        tk.append(np.stack(rt))
+        lb.append(np.stack(rl))
+    return jnp.asarray(np.stack(tk)), jnp.asarray(np.stack(lb))

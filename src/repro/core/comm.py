@@ -81,6 +81,18 @@ class RoundComm:
         return RoundComm(0, 0, 0)
 
 
+def per_client_comm(payload: Any) -> tuple[int, int]:
+    """(bytes, elems) of ONE client's slice of a stacked payload — or of a
+    ``jax.eval_shape`` struct of it, which is how the compiled scan engine
+    prices a whole run's traffic without any device work: the payload
+    STRUCTURE is round-invariant, so bytes per round are just this constant
+    times the round's participant count.  ``None`` payloads (strategies
+    that never communicate) cost (0, 0)."""
+    if payload is None:
+        return 0, 0
+    return stacked_per_client_bytes(payload), stacked_per_client_elems(payload)
+
+
 def round_comm_stacked(payload: Any, n_participants: int) -> RoundComm:
     """Accounting from ONE stacked payload tree (leaves (m, …), the
     vmap/shard server layout): only the ``n_participants`` client slices

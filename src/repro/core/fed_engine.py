@@ -1,0 +1,319 @@
+"""Compiled multi-round federated engine: ``FedConfig.engine="scan"``.
+
+The eager engine (:func:`repro.core.federated.run_federated`'s default
+path) batches all m clients into one program per round, but Algorithm 1's
+outer loop is still Python: every round pays separate dispatches for local
+fit, participation select, uplink, S^model refresh, aggregation, install
+and eval, plus host syncs that serialize the device.  For the
+many-rounds × many-clients regime — CE-LoRA's home turf, since the r×r
+payload makes rounds cheap on the wire — that per-round overhead
+dominates.
+
+This engine fuses ONE FULL ROUND into a single traced ``round_step``
+
+    vmapped local fit → participation select → uplink → masked in-graph
+    S^model row refresh → eqn-(3) personalized aggregation (or FedAvg) →
+    masked install → masked eval
+
+and drives it with ``jax.lax.scan`` over CHUNKS of rounds (DESIGN.md §9):
+
+* participation plans become precomputed device arrays
+  (:func:`repro.core.sampling.stack_plans`) consumed one row per round
+  inside the scan — shapes are static because a fixed config samples the
+  same k clients every round;
+* per-round minibatches are prefetched per chunk as
+  ``(chunk, m, local_steps, B, T)`` stacks
+  (:func:`repro.core.client_batch.stack_chunk_batches`), drawn from the
+  same per-client RNG streams as the eager engine;
+* the history (loss and per-client accuracy per round) accumulates
+  device-side in the scan's ys — exactly ONE host sync per chunk;
+* communication is priced host-side from the plan's participant counts
+  times the static per-client payload bytes
+  (:func:`repro.core.comm.per_client_comm` over ``jax.eval_shape``), so
+  the accounting stays exact without touching the device.
+
+Equivalence contract (asserted in tests/test_fed_engine.py): given the
+same ``FedConfig`` (minus ``engine``), the scan engine reproduces the
+eager history — loss/accuracy allclose, sampled/participant sets and
+byte counts identical — at full and partial participation.  The S^model
+carry starts from the full pairwise CKA of the initial Cs and each round
+refreshes only the sampled rows/columns, which is precisely the eager
+cache's semantics (unsampled pairs' Cs are frozen, so their cached CKA
+stays exact).
+
+Checkpoint/resume: at every chunk boundary the full federated state
+(stacked client states, S^model carry, per-round history) is written
+atomically via :mod:`repro.checkpoint.ckpt` with the run fingerprint in
+the metadata.  ``FedConfig.resume=True`` restores it, fast-forwards the
+per-client data streams over the completed rounds (the loaders are
+deterministic in the seed and the number of draws), and continues —
+reproducing the uninterrupted history exactly.
+"""
+from __future__ import annotations
+
+import os
+import time
+import warnings
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import aggregation, client_batch, comm, sampling, tri_lora
+from repro.core.jit_cache import JitCache
+from repro.core.similarity import cka
+
+_SCAN_CACHE = JitCache(maxsize=8)
+
+# FedConfig fields that must match between a checkpoint and the run
+# resuming from it — anything that changes the per-round math or the
+# participation plans makes the stored state meaningless.
+_FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
+                       "batch_size", "lr", "seed", "participation",
+                       "sampler", "straggler_frac", "use_data_sim",
+                       "use_model_sim", "cka_probes", "self_weight",
+                       "pfedme_eta")
+
+
+def _fingerprint(fed) -> dict:
+    return {f: getattr(fed, f) for f in _FINGERPRINT_FIELDS}
+
+
+def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
+                    use_data: bool, use_model: bool):
+    """One jitted program: scan `round_step` over a chunk's prefetched
+    batches and plan rows.  Everything run-specific but round-invariant
+    (test stacks, S^data, CKA probes, sample counts) arrives via ``consts``
+    so the compiled program is reusable across runs that share the task."""
+    vfit = jax.vmap(local_fit)
+    veval = jax.vmap(eval_one)
+    eta = fed.pfedme_eta
+    self_weight = fed.self_weight
+
+    def round_step(carry, xs, consts):
+        stacked, s_model = carry
+        toks, labs, smask, pmask, sampled_ids = xs
+        tr = strategy.trainable(stacked)
+        w_ref = stacked.get("w", {})
+        # all m always train (static shapes); the select below freezes the
+        # unsampled clients' state exactly, as in the eager engine
+        tr, losses = vfit(tr, w_ref, toks, labs)
+        prev = dict(stacked)
+        new = dict(stacked)
+        new.update(tr)
+        new = strategy.after_local(new, eta)
+        stacked = client_batch.select_clients(smask, new, prev)
+
+        payload = strategy.uplink(stacked)
+        weights = None
+        if strategy.aggregate == "personalized":
+            sims = []
+            if use_data:
+                sims.append(consts["s_data"])
+            if use_model:
+                cs = cka.stacked_cs(tri_lora.tree_payload(stacked["adapter"]))
+                s_model = cka.refresh_rows_inline(s_model, cs, sampled_ids,
+                                                  consts["probes"])
+                sims.append(s_model)
+            assert sims, "celora needs at least one similarity term"
+            weights = aggregation.personalized_weights(sum(sims), self_weight,
+                                                       pmask)
+        down = strategy.server_stacked(payload,
+                                       sample_counts=consts["counts"],
+                                       weights=weights, participants=pmask)
+        if down is not None:
+            stacked = client_batch.select_clients(
+                pmask, strategy.install(stacked, down), stacked)
+
+        accs = veval(strategy.trainable(stacked),
+                     consts["test_toks"], consts["test_labs"])
+        sm = smask.astype(losses.dtype)
+        loss = jnp.sum(losses * sm) / jnp.maximum(jnp.sum(sm), 1.0)
+        return (stacked, s_model), (loss, accs)
+
+    @jax.jit
+    def run_chunk(carry, xs, consts):
+        return jax.lax.scan(lambda c, x: round_step(c, x, consts), carry, xs)
+
+    return run_chunk
+
+
+def _save_state(fed, stacked, s_model, losses, accs, walls,
+                rounds_done: int, strategy) -> None:
+    tree = {"state": stacked,
+            "loss": np.asarray(losses, np.float32),
+            "accs": np.asarray(accs, np.float32),
+            "wall": np.asarray(walls, np.float32)}
+    if s_model is not None:
+        tree["s_model"] = s_model
+    ckpt.save(fed.checkpoint_path, tree,
+              metadata=dict(_fingerprint(fed), engine="scan",
+                            strategy=strategy.name, rounds_done=rounds_done))
+
+
+def _load_state(fed, stacked, s_model, m: int):
+    """Restore a chunk-boundary checkpoint into (stacked, s_model, history
+    arrays, rounds_done), validating the run fingerprint first."""
+    meta = ckpt.metadata(fed.checkpoint_path)
+    if "rounds_done" not in meta:
+        raise ValueError(f"{fed.checkpoint_path!r} is not a scan-engine "
+                         f"checkpoint (no rounds_done in metadata)")
+    want = _fingerprint(fed)
+    stale = {k: (meta.get(k), v) for k, v in want.items()
+             if k != "rounds" and meta.get(k) != v}
+    if stale:
+        raise ValueError(f"checkpoint {fed.checkpoint_path!r} was written "
+                         f"by a different run configuration: {stale}")
+    rounds_done = int(meta["rounds_done"])
+    if rounds_done > fed.rounds:
+        raise ValueError(f"checkpoint has {rounds_done} completed rounds "
+                         f"but the run asks for only {fed.rounds}")
+    like = {"state": stacked,
+            "loss": np.zeros((rounds_done,), np.float32),
+            "accs": np.zeros((rounds_done, m), np.float32),
+            "wall": np.zeros((rounds_done,), np.float32)}
+    if s_model is not None:
+        like["s_model"] = s_model
+    tree = ckpt.restore(fed.checkpoint_path, like)
+    return (tree["state"], tree.get("s_model"), tree["loss"], tree["accs"],
+            tree["wall"], rounds_done)
+
+
+def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
+             sample_counts: Sequence[int],
+             plans: Sequence[sampling.ParticipationPlan],
+             local_fit: Callable, eval_one: Callable,
+             s_data: Optional[np.ndarray],
+             test_toks: jnp.ndarray, test_labs: jnp.ndarray,
+             verbose: bool = False) -> dict:
+    """The scan-engine body of ``run_federated`` (see module docstring).
+    Called by :func:`repro.core.federated.run_federated` after the shared
+    setup; returns the identical result dict."""
+    from repro.core.federated import RoundRecord  # late: avoid import cycle
+
+    m = fed.n_clients
+    mode = fed.client_parallelism
+    chunk = max(1, int(fed.chunk_rounds))
+
+    stacked = client_batch.stack_states(states)
+    put = lambda t: t
+    if mode == "shard":
+        from repro.launch import mesh as mesh_lib
+        cmesh = mesh_lib.make_client_mesh(m)
+        put = lambda t: mesh_lib.shard_clients(cmesh, t)
+        stacked = put(stacked)
+
+    pstack = sampling.stack_plans(plans, m)
+    per_b, per_e = comm.per_client_comm(
+        jax.eval_shape(strategy.uplink, stacked))
+
+    personalized = strategy.aggregate == "personalized"
+    use_data = personalized and fed.use_data_sim and s_data is not None
+    use_model = personalized and fed.use_model_sim
+
+    # S^model carry: full pairwise CKA of the INITIAL Cs — the exact cache
+    # state the eager engine's row refresh semantics start from (unsampled
+    # pairs keep initial-C entries; sampled rows are refreshed in-graph)
+    s_model = None
+    probes = None
+    if use_model:
+        payload0 = tri_lora.tree_payload(stacked["adapter"])
+        r = cka.stacked_cs(payload0).shape[-1]
+        probes = jax.random.normal(jax.random.key(fed.seed + 97),
+                                   (fed.cka_probes, r), jnp.float32)
+        s_model = cka.pairwise_model_similarity_stacked(
+            payload0, jax.random.key(fed.seed + 97), fed.cka_probes)
+
+    consts = {"counts": jnp.asarray(np.asarray(sample_counts, np.int64)),
+              "test_toks": test_toks, "test_labs": test_labs,
+              "s_data": jnp.asarray(s_data) if use_data else None,
+              "probes": probes}
+
+    run_chunk = _SCAN_CACHE.get_or_build(
+        (task.base, task.cfg),
+        ("scan", strategy.name, fed.lr, fed.local_steps, fed.batch_size,
+         fed.pfedme_eta, fed.self_weight, use_data, use_model, mode),
+        lambda: _build_chunk_fn(strategy, fed, local_fit, eval_one,
+                                use_data, use_model))
+
+    # ---- resume from a chunk-boundary checkpoint
+    hist_loss: list = []
+    hist_accs: list = []
+    hist_wall: list = []
+    start = 0
+    if fed.checkpoint_path and fed.resume and \
+            not os.path.exists(fed.checkpoint_path):
+        warnings.warn(f"resume: no checkpoint at {fed.checkpoint_path!r} — "
+                      f"starting from round 0 (checkpoints will be written "
+                      f"there)")
+    if fed.checkpoint_path and fed.resume and \
+            os.path.exists(fed.checkpoint_path):
+        stacked, s_model, l0, a0, w0, start = _load_state(fed, stacked,
+                                                          s_model, m)
+        stacked = put(stacked)
+        hist_loss = [float(v) for v in l0]
+        hist_accs = [list(map(float, row)) for row in a0]
+        hist_wall = [float(v) for v in w0]
+        # fast-forward the deterministic per-client data streams so round
+        # `start` draws exactly what the uninterrupted run would have drawn
+        for _ in range(start):
+            for ld in loaders:
+                for _b in ld.batches(fed.local_steps):
+                    pass
+        if verbose:
+            print(f"[{strategy.name}] resumed {start} rounds "
+                  f"from {fed.checkpoint_path}")
+
+    carry = (stacked, s_model)
+    for c0 in range(start, fed.rounds, chunk):
+        c1 = min(c0 + chunk, fed.rounds)
+        t0 = time.time()
+        toks, labs = client_batch.stack_chunk_batches(loaders, c1 - c0,
+                                                      fed.local_steps)
+        xs = (toks, labs,
+              jnp.asarray(pstack.sampled_mask[c0:c1]),
+              jnp.asarray(pstack.participant_mask[c0:c1]),
+              jnp.asarray(pstack.sampled_ids[c0:c1]))
+        carry, (losses, accs) = run_chunk(carry, xs, consts)
+        losses = np.asarray(losses)         # the chunk's ONE host sync
+        accs = np.asarray(accs)
+        per_round = (time.time() - t0) / (c1 - c0)
+        hist_loss += [float(v) for v in losses]
+        hist_accs += [list(map(float, row)) for row in accs]
+        hist_wall += [per_round] * (c1 - c0)
+        if fed.checkpoint_path:
+            _save_state(fed, carry[0], carry[1], hist_loss, hist_accs,
+                        hist_wall, c1, strategy)
+        if verbose:
+            print(f"[{strategy.name}] rounds {c0:3d}–{c1 - 1:3d} "
+                  f"loss {hist_loss[-1]:.4f} "
+                  f"acc {float(np.mean(hist_accs[-1])):.3f} "
+                  f"({per_round:.2f}s/round)")
+
+    history = [
+        RoundRecord(
+            rnd, hist_loss[rnd], hist_accs[rnd],
+            uplink_bytes=per_b * int(pstack.n_participants[rnd]),
+            downlink_bytes=per_b * int(pstack.n_participants[rnd]),
+            wall_s=hist_wall[rnd],
+            participants=plans[rnd].participants.tolist(),
+            sampled=plans[rnd].sampled.tolist(),
+            dropped=plans[rnd].dropped.tolist(),
+            uplink_elems=per_e * int(pstack.n_participants[rnd]))
+        for rnd in range(fed.rounds)]
+
+    states = client_batch.unstack_states(carry[0])
+    return {
+        "method": strategy.name,
+        "history": history,
+        "final_accs": history[-1].accs,
+        "mean_acc": history[-1].mean_acc,
+        "min_acc": history[-1].min_acc,
+        "max_acc": history[-1].max_acc,
+        "uplink_floats_per_round": history[-1].uplink_elems,
+        "uplink_bytes_per_round": history[-1].uplink_bytes,
+        "downlink_bytes_per_round": history[-1].downlink_bytes,
+        "states": states,
+    }

@@ -53,6 +53,15 @@ contract in :mod:`repro.core.baselines`).  All three paths consume the same
 per-client RNG data streams, so given the same seed they produce the same
 history up to floating-point reassociation (asserted in
 tests/test_client_parallel.py).
+
+Round dispatch (``FedConfig.engine``)
+-------------------------------------
+Orthogonal to client parallelism: ``"eager"`` (default) runs Algorithm 1's
+outer loop in Python — one dispatch per round stage — while ``"scan"``
+fuses the whole round into one traced step and ``jax.lax.scan``s it over
+chunks of rounds with chunk-boundary checkpoint/resume
+(:mod:`repro.core.fed_engine`, DESIGN.md §9).  The scan engine is proven
+equivalent to the eager history in tests/test_fed_engine.py.
 """
 from __future__ import annotations
 
@@ -69,15 +78,21 @@ import numpy as np
 from repro.core import aggregation, client_batch, comm, sampling, tri_lora
 from repro.core.baselines import Strategy, get_strategy
 from repro.core.fed_model import FedTask
+from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka, gmm, ot
 from repro.data.pipeline import Loader
 from repro.optim import adamw, apply_updates
 
 
-_LOCAL_FIT_CACHE: dict = {}
-_EVAL_CACHE: dict = {}
+# Compiled-program caches keyed on the task's parameter OBJECTS (strong
+# references + identity re-check, see repro.core.jit_cache) — a bare id()
+# key could silently serve a stale program for a different task after GC
+# hands the id to a new object, and a plain dict grows without bound.
+_LOCAL_FIT_CACHE = JitCache(maxsize=16)
+_EVAL_CACHE = JitCache(maxsize=16)
 
 PARALLELISM_MODES = ("loop", "vmap", "shard")
+ENGINES = ("eager", "scan")
 
 
 @dataclasses.dataclass
@@ -91,6 +106,11 @@ class FedConfig:
     seed: int = 0
     # --- client dispatch: "loop" (reference) | "vmap" | "shard" ------------
     client_parallelism: str = "vmap"
+    # --- round dispatch (repro.core.fed_engine, DESIGN.md §9) --------------
+    engine: str = "eager"             # "eager" | "scan" (compiled rounds)
+    chunk_rounds: int = 8             # scan: rounds fused per dispatch
+    checkpoint_path: Optional[str] = None  # scan: state file, chunk cadence
+    resume: bool = False              # scan: restore checkpoint_path first
     # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
     participation: float = 1.0        # fraction of clients sampled per round
     sampler: str = "uniform"          # "uniform" | "weighted" | "round_robin"
@@ -225,6 +245,13 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     if fed.sampler not in sampling.SAMPLERS:
         raise ValueError(f"sampler={fed.sampler!r}; "
                          f"expected one of {sampling.SAMPLERS}")
+    if fed.engine not in ENGINES:
+        raise ValueError(f"engine={fed.engine!r}; expected one of {ENGINES}")
+    if fed.chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1; got {fed.chunk_rounds}")
+    if fed.engine != "scan" and (fed.checkpoint_path or fed.resume):
+        raise ValueError("checkpoint_path/resume require engine='scan' "
+                         "(the eager engine does not checkpoint)")
     m = fed.n_clients
     sampling.n_sampled(m, fed.participation)      # validates participation
     if not 0.0 <= fed.straggler_frac < 1.0:
@@ -277,23 +304,12 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             one_step, (trainable, opt_state), (tok_stack, lab_stack))
         return trainable, jnp.mean(losses)
 
-    # cache the jitted local step across run_federated calls (the benchmark
-    # suite runs the same (task, method, hyper) combination many times and
-    # XLA compilation dominates otherwise)
-    cache_key = (id(task.base), id(task.cfg), strategy.name, fed.lr,
-                 fed.local_steps, fed.batch_size, fed.pfedme_eta, mode)
-    if cache_key in _LOCAL_FIT_CACHE:
-        local_fit = _LOCAL_FIT_CACHE[cache_key]
-    else:
-        local_fit = jax.jit(_local_fit if mode == "loop"
-                            else jax.vmap(_local_fit))
-        _LOCAL_FIT_CACHE[cache_key] = local_fit
-
     # ---- masked eval over padded test sets, stacked to (m, pad_to, T)
     # (eager per-example eval dominated the round time otherwise); padded
-    # rows carry label -1 and weight 0.  The loop path evaluates one client
+    # rows carry label -1 and weight 0, so the pad granularity changes only
+    # the compute, never the accuracy.  The loop path evaluates one client
     # slice per call; the vectorized paths run ONE vmapped eval per round.
-    pad_to = max(-(-len(d["labels"]) // 64) * 64 for d in client_test)
+    pad_to = max(-(-len(d["labels"]) // 32) * 32 for d in client_test)
     seq_lens = {d["tokens"].shape[1] for d in client_test}
     if len(seq_lens) != 1:
         raise ValueError(
@@ -316,18 +332,36 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         correct = (jnp.argmax(logits, -1) == labs) * w
         return jnp.sum(correct) / jnp.maximum(jnp.sum(w), 1.0)
 
-    eval_key = (id(task.base), id(task.cfg), strategy.name, pad_to, mode)
-    if eval_key in _EVAL_CACHE:
-        eval_fn = _EVAL_CACHE[eval_key]
-    else:
-        eval_fn = jax.jit(_eval_one if mode == "loop"
-                          else jax.vmap(_eval_one))
-        _EVAL_CACHE[eval_key] = eval_fn
-
     # ---- one-shot S^data (paper: computed once at FL start)
     s_data = None
     if strategy.aggregate == "personalized" and fed.use_data_sim:
         s_data = data_similarity(task, fed, client_train)
+
+    # ---- engine dispatch: the compiled multi-round engine fuses the whole
+    # round into one program and scans it over chunks of rounds — see
+    # repro.core.fed_engine (DESIGN.md §9); the eager path below is the
+    # reference it is proven against
+    if fed.engine == "scan":
+        from repro.core import fed_engine
+        return fed_engine.run_scan(
+            task=task, fed=fed, strategy=strategy, states=states,
+            loaders=loaders, sample_counts=sample_counts, plans=plans,
+            local_fit=_local_fit, eval_one=_eval_one, s_data=s_data,
+            test_toks=test_toks, test_labs=test_labs, verbose=verbose)
+
+    # cache the jitted local step / eval across run_federated calls (the
+    # benchmark suite runs the same (task, method, hyper) combination many
+    # times and XLA compilation dominates otherwise)
+    local_fit = _LOCAL_FIT_CACHE.get_or_build(
+        (task.base, task.cfg),
+        (strategy.name, fed.lr, fed.local_steps, fed.batch_size,
+         fed.pfedme_eta, mode),
+        lambda: jax.jit(_local_fit if mode == "loop"
+                        else jax.vmap(_local_fit)))
+    eval_fn = _EVAL_CACHE.get_or_build(
+        (task.base, task.cfg), (strategy.name, pad_to, mode),
+        lambda: jax.jit(_eval_one if mode == "loop"
+                        else jax.vmap(_eval_one)))
 
     # ---- S^model: CKA over the clients' Cs.  Under partial participation
     # only rows/cols of clients whose C changed this round (the SAMPLED set

@@ -1,0 +1,67 @@
+"""Identity-keyed cache for compiled programs, with safe lifetimes.
+
+The federated runtime reuses jitted local-fit / eval / round-step programs
+across ``run_federated`` calls (the benchmark suite runs the same
+(task, method, hyper) combination many times and XLA compilation dominates
+otherwise).  The programs close over the task's parameter pytrees, so the
+cache key must identify *those objects* — but a bare ``id()`` key is a
+latent bug: once the anchoring object is garbage-collected, CPython can
+hand its id to a brand-new, different task, silently serving a compiled
+program traced against the wrong parameters.  And a plain dict grows
+without bound.
+
+:class:`JitCache` fixes both:
+
+* every entry holds STRONG references to its anchor objects, so an id in
+  the table always refers to a live object and id reuse against a live
+  entry is impossible (two live objects never share an id);
+* lookups re-verify ``is``-identity of the stored anchors, so even a
+  hypothetical collision cannot serve a stale program;
+* LRU eviction bounds the table (and releases the anchors, after which
+  their ids are free to be reused — against a now-absent entry).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable, Sequence
+
+
+class JitCache:
+    """LRU cache keyed on anchor-object identity plus a hashable tail.
+
+    ``anchors`` are the objects the cached program was built against
+    (e.g. a task's parameter pytree and config); they are held strongly
+    for the lifetime of the entry.  ``key`` carries the hashable
+    hyperparameters that also shape the trace.
+    """
+
+    def __init__(self, maxsize: int = 16):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1; got {maxsize}")
+        self.maxsize = maxsize
+        self._entries: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def get_or_build(self, anchors: Sequence[Any], key: Hashable,
+                     build: Callable[[], Any]) -> Any:
+        anchors = tuple(anchors)
+        full_key = (tuple(id(a) for a in anchors), key)
+        hit = self._entries.get(full_key)
+        if hit is not None:
+            value, kept = hit
+            if len(kept) == len(anchors) and all(
+                    k is a for k, a in zip(kept, anchors)):
+                self._entries.move_to_end(full_key)
+                return value
+            # id collision against a dead anchor's slot: drop the stale entry
+            del self._entries[full_key]
+        value = build()
+        self._entries[full_key] = (value, anchors)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return value

@@ -53,11 +53,15 @@ class DLGModel:
 
 def make_model(key, vocab: int = 128, d: int = 32, n_classes: int = 4,
                rank: int = 4) -> DLGModel:
-    ks = jax.random.split(key, 4)
+    # one key per random draw: the frozen base (embed/w/head) and the
+    # mid-training adapter perturbations (B, C) must be mutually independent
+    # — a shared key correlates the base with exactly the state the DLG
+    # attack probes, biasing the leakage comparison
+    ks = jax.random.split(key, 6)
     adapter = tri_lora.init_adapter(ks[3], d, d, rank)
     # non-degenerate adapter (mid-training state): B ≠ 0
-    adapter["B"] = jax.random.normal(ks[2], adapter["B"].shape) * 0.3
-    adapter["C"] = adapter["C"] + jax.random.normal(ks[1], adapter["C"].shape) * 0.2
+    adapter["B"] = jax.random.normal(ks[4], adapter["B"].shape) * 0.3
+    adapter["C"] = adapter["C"] + jax.random.normal(ks[5], adapter["C"].shape) * 0.2
     return DLGModel(
         embed=jax.random.normal(ks[0], (vocab, d)) * 0.5,
         w=jax.random.normal(ks[1], (d, d)) * 0.3,

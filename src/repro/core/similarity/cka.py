@@ -104,14 +104,24 @@ def pairwise_model_similarity_stacked(c_tree: Any, key: jax.Array,
     return _pairwise_cka_stacked(stacked_cs(c_tree), key, n_probes)
 
 
-@functools.partial(jax.jit, static_argnames=("n_probes",))
-def _refresh_rows(prev: jnp.ndarray, cs: jnp.ndarray, ids: jnp.ndarray,
-                  key: jax.Array, n_probes: int) -> jnp.ndarray:
-    probes = jax.random.normal(key, (n_probes, cs.shape[-1]), jnp.float32)
+def refresh_rows_inline(prev: jnp.ndarray, cs: jnp.ndarray,
+                        ids: jnp.ndarray,
+                        probes: jnp.ndarray) -> jnp.ndarray:
+    """In-graph row refresh (no jit wrapper): recompute rows/columns ``ids``
+    of the cached CKA matrix against the current Cs, with the probe batch
+    supplied by the caller.  ``ids`` may be a traced array of static length,
+    so this traces cleanly inside the scan engine's ``round_step``."""
     rows = jax.vmap(lambda ci: jax.vmap(
         lambda cj: _mean_module_cka(ci, cj, probes))(cs))(cs[ids])  # (k, m)
     s = prev.astype(rows.dtype).at[ids, :].set(rows)
     return s.at[:, ids].set(rows.T)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probes",))
+def _refresh_rows(prev: jnp.ndarray, cs: jnp.ndarray, ids: jnp.ndarray,
+                  key: jax.Array, n_probes: int) -> jnp.ndarray:
+    probes = jax.random.normal(key, (n_probes, cs.shape[-1]), jnp.float32)
+    return refresh_rows_inline(prev, cs, ids, probes)
 
 
 def refresh_pairwise_cka(prev: jnp.ndarray | None, cs: jnp.ndarray,

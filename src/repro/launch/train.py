@@ -23,17 +23,27 @@ their adapters frozen for the round, aggregation renormalizes over the
 post-straggler participants, and the reported communication is the exact
 per-round uplink/downlink BYTES of the participants' payloads
 (:mod:`repro.core.comm`).
+
+Compiled rounds (DESIGN.md §9): ``--engine scan`` fuses local fit, select,
+similarity, aggregation, and install into one jitted round step and scans
+it over ``--chunk-rounds`` rounds per dispatch, checkpointing the full
+stacked adapter state to ``--ckpt`` at every chunk boundary; ``--resume``
+restores it, fast-forwards the data streams, and reproduces the
+uninterrupted run exactly.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save
+from repro.checkpoint import metadata as ckpt_metadata
+from repro.checkpoint import restore, save
 from repro.core import aggregation, client_batch, comm, sampling, tri_lora
 from repro.core.similarity import cka
 from repro.data import synthetic
@@ -48,9 +58,17 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         ckpt: str | None = None, verbose: bool = True,
         reduced: bool = False, client_parallelism: str = "vmap",
         participation: float = 1.0, sampler: str = "uniform",
-        straggler_frac: float = 0.0) -> dict:
+        straggler_frac: float = 0.0, engine: str = "eager",
+        chunk_rounds: int = 8, resume: bool = False) -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
+    assert engine in ("eager", "scan"), engine
     vectorized = client_parallelism == "vmap"
+    if engine == "scan" and not vectorized:
+        raise ValueError("engine='scan' runs on the stacked client axis; "
+                         "use client_parallelism='vmap'")
+    if resume and engine != "scan":
+        raise ValueError("--resume requires --engine scan (the eager "
+                         "driver does not write resumable state)")
     partial = participation < 1.0 or straggler_frac > 0.0
     sampling.n_sampled(clients, participation)    # validates participation
     if not 0.0 <= straggler_frac < 1.0:
@@ -103,13 +121,27 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
     # here — heterogeneous shards would differentiate it)
     stream_sizes = [len(s) for s in streams]
 
+    # per-round participation plans, deterministic in the seed: both engines
+    # (and a killed-then-resumed scan run) see the identical subsets
+    plans = [(sampling.build_plan(sampler, clients, participation,
+                                  straggler_frac, rnd, seed,
+                                  sample_counts=stream_sizes)
+              if partial else sampling.full_plan(clients, rnd))
+             for rnd in range(rounds)]
+
+    if engine == "scan":
+        history, adapters = _run_scan_lm(
+            cfg=cfg, local_fit_raw=_local_fit, draw=_draw,
+            stacked=stacked, plans=plans, method=method, clients=clients,
+            rounds=rounds, chunk_rounds=chunk_rounds, seed=seed,
+            ckpt=ckpt, resume=resume, verbose=verbose)
+        return {"history": history, "adapters": adapters, "cfg": cfg,
+                "base": base}
+
     history = []
     for rnd in range(rounds):
         t0 = time.time()
-        plan = (sampling.build_plan(sampler, clients, participation,
-                                    straggler_frac, rnd, seed,
-                                    sample_counts=stream_sizes)
-                if partial else sampling.full_plan(clients, rnd))
+        plan = plans[rnd]
         smask = plan.mask(clients, which="sampled")
         cmask = jnp.asarray(plan.mask(clients)) if partial else None
         if vectorized:
@@ -195,6 +227,118 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             "base": base}
 
 
+def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
+                 clients: int, rounds: int, chunk_rounds: int, seed: int,
+                 ckpt: str | None, resume: bool, verbose: bool):
+    """Compiled LM rounds: one jitted ``lax.scan`` dispatch per chunk of
+    rounds (mirrors :mod:`repro.core.fed_engine` for the classification
+    runtime; DESIGN.md §9).  Checkpoints the full stacked adapter state at
+    chunk boundaries; ``resume`` restores it, fast-forwards the data
+    streams, and continues bit-for-bit."""
+    chunk = max(1, int(chunk_rounds))
+    vfit = jax.vmap(local_fit_raw)
+    pstack = sampling.stack_plans(plans, clients)
+    if method == "celora":
+        per_b, per_e = comm.per_client_comm(
+            jax.eval_shape(tri_lora.tree_payload, stacked))
+    elif method == "fedavg":
+        per_b, per_e = comm.per_client_comm(stacked)
+    else:
+        per_b, per_e = 0, 0
+
+    def round_step(stk, xs):
+        toks, labs, smask, pmask = xs
+        new, ls = vfit(stk, toks, labs)
+        stk = client_batch.select_clients(smask, new, stk)
+        if method == "celora":
+            payload = tri_lora.tree_payload(stk)
+            s_model = cka.pairwise_model_similarity_stacked(
+                payload, jax.random.key(seed + 99), 32)
+            w = aggregation.personalized_weights(s_model, participants=pmask)
+            mixed = aggregation.aggregate_stacked(payload, w)
+            stk = client_batch.select_clients(
+                pmask, tri_lora.tree_load_payload(stk, mixed), stk)
+        elif method == "fedavg":
+            g = aggregation.fedavg_stacked(stk, jnp.ones(clients), pmask)
+            stk = client_batch.select_clients(
+                pmask, client_batch.broadcast_to_clients(g, clients), stk)
+        sm = smask.astype(ls.dtype)
+        loss = jnp.sum(ls[:, -1] * sm) / jnp.maximum(jnp.sum(sm), 1.0)
+        return stk, loss
+
+    run_chunk = jax.jit(lambda stk, xs: jax.lax.scan(round_step, stk, xs))
+
+    hist_loss: list = []
+    hist_wall: list = []
+    start = 0
+    if resume and ckpt and not os.path.exists(ckpt):
+        warnings.warn(f"--resume: no checkpoint at {ckpt!r} — starting "
+                      f"from round 0 (checkpoints will be written there)")
+    if resume and ckpt and os.path.exists(ckpt):
+        meta = ckpt_metadata(ckpt)
+        if "rounds_done" not in meta:
+            raise ValueError(f"{ckpt!r} is not a scan-engine checkpoint "
+                             f"(no rounds_done in metadata)")
+        want = {"arch": cfg.name, "method": method, "clients": clients,
+                "seed": seed}
+        stale = {k: (meta.get(k), v) for k, v in want.items()
+                 if meta.get(k) != v}
+        if stale:
+            raise ValueError(f"checkpoint {ckpt!r} was written by a "
+                             f"different run configuration: {stale}")
+        start = int(meta["rounds_done"])
+        if start > rounds:
+            raise ValueError(f"checkpoint has {start} completed rounds but "
+                             f"the run asks for only {rounds}")
+        tree = restore(ckpt, {"state": stacked,
+                              "loss": np.zeros(start, np.float32),
+                              "wall": np.zeros(start, np.float32)})
+        stacked = tree["state"]
+        hist_loss = [float(v) for v in tree["loss"]]
+        hist_wall = [float(v) for v in tree["wall"]]
+        for _ in range(start):          # fast-forward the data streams
+            for i in range(clients):
+                draw(i)
+        if verbose:
+            print(f"resumed {start} rounds from {ckpt}", flush=True)
+
+    for c0 in range(start, rounds, chunk):
+        c1 = min(c0 + chunk, rounds)
+        t0 = time.time()
+        drawn = [[draw(i) for i in range(clients)] for _ in range(c0, c1)]
+        toks = jnp.asarray(np.stack([np.stack([d[0] for d in rr])
+                                     for rr in drawn]))
+        labs = jnp.asarray(np.stack([np.stack([d[1] for d in rr])
+                                     for rr in drawn]))
+        xs = (toks, labs,
+              jnp.asarray(pstack.sampled_mask[c0:c1]),
+              jnp.asarray(pstack.participant_mask[c0:c1]))
+        stacked, losses = run_chunk(stacked, xs)
+        losses = np.asarray(losses)          # one host sync per chunk
+        per_round = (time.time() - t0) / (c1 - c0)
+        hist_loss += [float(v) for v in losses]
+        hist_wall += [per_round] * (c1 - c0)
+        if ckpt:
+            save(ckpt, {"state": stacked,
+                        "loss": np.asarray(hist_loss, np.float32),
+                        "wall": np.asarray(hist_wall, np.float32)},
+                 metadata={"rounds_done": c1, "arch": cfg.name,
+                           "method": method, "engine": "scan",
+                           "clients": clients, "seed": seed})
+        if verbose:
+            print(f"rounds {c0:3d}–{c1 - 1:3d}  loss {hist_loss[-1]:.4f}  "
+                  f"({per_round:.1f}s/round)", flush=True)
+
+    history = [{"round": rnd, "loss": hist_loss[rnd],
+                "uplink_floats": per_e * plans[rnd].n_participants,
+                "uplink_bytes": per_b * plans[rnd].n_participants,
+                "downlink_bytes": per_b * plans[rnd].n_participants,
+                "participants": plans[rnd].participants.tolist(),
+                "wall_s": hist_wall[rnd]}
+               for rnd in range(rounds)]
+    return history, client_batch.unstack_states(stacked)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="fed-100m")
@@ -216,6 +360,12 @@ def main():
                     choices=["uniform", "weighted", "round_robin"])
     ap.add_argument("--straggler-frac", type=float, default=0.0,
                     help="fraction of sampled clients dropped after local fit")
+    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
+                    help="scan = compiled multi-round engine (DESIGN.md §9)")
+    ap.add_argument("--chunk-rounds", type=int, default=8,
+                    help="scan engine: rounds fused per dispatch")
+    ap.add_argument("--resume", action="store_true",
+                    help="scan engine: restore --ckpt and continue")
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
@@ -223,7 +373,8 @@ def main():
               reduced=args.reduced,
               client_parallelism=args.client_parallelism,
               participation=args.participation, sampler=args.sampler,
-              straggler_frac=args.straggler_frac)
+              straggler_frac=args.straggler_frac, engine=args.engine,
+              chunk_rounds=args.chunk_rounds, resume=args.resume)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

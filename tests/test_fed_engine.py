@@ -1,0 +1,143 @@
+"""Compiled scan engine (repro.core.fed_engine): eager⇄scan equivalence at
+full and partial participation in all three parallelism modes, chunk-size
+invariance, chunk-boundary checkpoint/resume reproducing the uninterrupted
+history exactly, and config-mismatch rejection."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+def _run(fed_setup, method, engine, rounds=2, **kw):
+    task, ctrain, ctest, m = fed_setup
+    kw.setdefault("chunk_rounds", 2)
+    fed = FedConfig(method=method, n_clients=m, rounds=rounds, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, engine=engine, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+def _assert_history_close(ref, out, states_atol=5e-4):
+    """The eager⇄scan equivalence contract (DESIGN.md §9): identical
+    participation and byte accounting, allclose loss/accuracy/states."""
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.sampled == r_out.sampled
+        assert r_ref.participants == r_out.participants
+        assert r_ref.dropped == r_out.dropped
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+        assert r_ref.downlink_bytes == r_out.downlink_bytes
+        assert r_ref.uplink_elems == r_out.uplink_elems
+        assert abs(r_ref.train_loss - r_out.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-3)
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=states_atol), s_ref, s_out)
+
+
+@pytest.mark.parametrize("participation", [1.0, 0.4])
+@pytest.mark.parametrize("parallelism", ["loop", "vmap", "shard"])
+def test_scan_matches_eager(fed_setup, parallelism, participation):
+    kw = dict(participation=participation, seed=3,
+              client_parallelism=parallelism)
+    ref = _run(fed_setup, "celora", "eager", **kw)
+    out = _run(fed_setup, "celora", "scan", **kw)
+    _assert_history_close(ref, out)
+
+
+@pytest.mark.parametrize("method", ["fedpetuning", "pfedme_lora", "fdlora",
+                                    "lora_loc"])
+def test_scan_matches_eager_methods(fed_setup, method):
+    """FedAvg / prox / dual / non-communicating strategies, with stragglers
+    (trained-but-not-uploaded state is the subtlest masking case)."""
+    kw = dict(participation=1.0, straggler_frac=0.3, seed=1)
+    ref = _run(fed_setup, method, "eager", **kw)
+    out = _run(fed_setup, method, "scan", **kw)
+    _assert_history_close(ref, out)
+
+
+def test_scan_chunk_size_invariance(fed_setup):
+    """The chunking is an execution detail: any chunk_rounds (including one
+    that does not divide rounds, and one larger than rounds) must produce
+    the same history."""
+    task, ctrain, ctest, m = fed_setup
+    outs = []
+    for chunk in (1, 2, 7):
+        fed = FedConfig(method="celora", n_clients=m, rounds=3,
+                        local_steps=4, batch_size=8, lr=1e-2,
+                        feature_samples=64, gmm_components=2, seed=5,
+                        participation=0.5, engine="scan",
+                        chunk_rounds=chunk)
+        outs.append(run_federated(task, fed, ctrain, ctest))
+    for out in outs[1:]:
+        for r_ref, r_out in zip(outs[0]["history"], out["history"]):
+            np.testing.assert_allclose(r_ref.train_loss, r_out.train_loss,
+                                       atol=1e-6)
+            np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-6)
+
+
+def test_scan_resume_reproduces_history(fed_setup, tmp_path):
+    """Kill-then-resume: a run checkpointed at a chunk boundary and resumed
+    later reproduces the uninterrupted history EXACTLY (losses, accuracies,
+    participation, bytes) and the same final states."""
+    path = str(tmp_path / "fed.npz")
+    kw = dict(participation=0.5, seed=3)
+    full = _run(fed_setup, "celora", "scan", rounds=6, **kw)
+    # "kill" after 4 rounds (two chunks of 2) …
+    _run(fed_setup, "celora", "scan", rounds=4, checkpoint_path=path, **kw)
+    # … and resume to round 6
+    res = _run(fed_setup, "celora", "scan", rounds=6, checkpoint_path=path,
+               resume=True, **kw)
+    for r_full, r_res in zip(full["history"], res["history"]):
+        assert r_full.train_loss == r_res.train_loss
+        assert r_full.accs == r_res.accs
+        assert r_full.participants == r_res.participants
+        assert r_full.uplink_bytes == r_res.uplink_bytes
+    for s_full, s_res in zip(full["states"], res["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_full, s_res)
+    # checkpointing leaves exactly the one state file behind
+    assert os.listdir(tmp_path) == ["fed.npz"]
+
+
+def test_scan_resume_rejects_other_config(fed_setup, tmp_path):
+    """A checkpoint from a different run configuration must be refused, not
+    silently continued from."""
+    path = str(tmp_path / "fed.npz")
+    _run(fed_setup, "celora", "scan", rounds=2, participation=0.5, seed=3,
+         checkpoint_path=path)
+    with pytest.raises(ValueError, match="different run configuration"):
+        _run(fed_setup, "celora", "scan", rounds=4, participation=0.5,
+             seed=7, checkpoint_path=path, resume=True)
+
+
+def test_eager_rejects_checkpoint_config(fed_setup):
+    with pytest.raises(ValueError, match="engine='scan'"):
+        _run(fed_setup, "celora", "eager", checkpoint_path="/tmp/x.npz")
+
+
+def test_bad_engine_rejected(fed_setup):
+    with pytest.raises(ValueError, match="engine"):
+        _run(fed_setup, "celora", "tape")
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        _run(fed_setup, "celora", "scan", chunk_rounds=0)

@@ -1,0 +1,81 @@
+"""JitCache (repro.core.jit_cache): the compiled-program cache must never
+serve a program built for a different task (regression for the id()-keyed
+dicts, where GC could hand a dead task's id to a new one), and must stay
+bounded under many distinct tasks."""
+import gc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import federated
+from repro.core.jit_cache import JitCache
+
+
+def test_distinct_anchors_distinct_entries():
+    cache = JitCache(maxsize=8)
+    base_a, base_b = {"w": np.zeros(3)}, {"w": np.zeros(3)}
+    fn_a = cache.get_or_build((base_a,), ("k",), lambda: ("built for", "a"))
+    fn_b = cache.get_or_build((base_b,), ("k",), lambda: ("built for", "b"))
+    assert fn_a == ("built for", "a") and fn_b == ("built for", "b")
+    assert len(cache) == 2
+    # hits return the same object without rebuilding
+    assert cache.get_or_build((base_a,), ("k",), lambda: "rebuilt") is fn_a
+
+
+def test_stale_id_never_served():
+    """The id()-reuse hazard: build for task A, drop A, allocate new tasks
+    until one lands on a recycled id.  The cache must rebuild, not serve
+    A's program.  (Entries hold strong refs, so a LIVE entry's id can never
+    be recycled — this exercises the post-eviction path too.)"""
+    cache = JitCache(maxsize=2)
+    a = {"w": np.zeros(3)}
+    cache.get_or_build((a,), ("k",), lambda: "A's program")
+    del a
+    gc.collect()
+    # churn allocations; every lookup must be answered by its OWN build
+    for i in range(200):
+        obj = {"w": np.zeros(3)}
+        got = cache.get_or_build((obj,), ("k",), lambda i=i: f"program {i}")
+        assert got == f"program {i}"        # never A's, never a prior obj's
+        del obj
+        gc.collect()
+
+
+def test_eviction_bounds_size_and_keeps_lru():
+    cache = JitCache(maxsize=3)
+    anchors = [({"i": i},) for i in range(5)]
+    for i, anc in enumerate(anchors):
+        cache.get_or_build(anc, (), lambda i=i: i)
+    assert len(cache) == 3
+    # oldest entries evicted; newest still hit
+    assert cache.get_or_build(anchors[4], (), lambda: "rebuilt") == 4
+    # evicted anchor rebuilds
+    assert cache.get_or_build(anchors[0], (), lambda: "rebuilt") == "rebuilt"
+
+
+def test_maxsize_validated():
+    with pytest.raises(ValueError, match="maxsize"):
+        JitCache(maxsize=0)
+
+
+def test_federated_caches_are_jit_caches():
+    """run_federated's program caches use the identity-safe cache, not the
+    unbounded id()-keyed dicts."""
+    assert isinstance(federated._LOCAL_FIT_CACHE, JitCache)
+    assert isinstance(federated._EVAL_CACHE, JitCache)
+
+
+def test_two_live_tasks_never_share_an_entry(tiny_cfg):
+    """End-to-end regression: two distinct FedTasks with identical shapes
+    and hyperparameters must compile two distinct local-fit programs."""
+    from repro.core.fed_model import FedTask
+
+    task_a = FedTask.create(jax.random.key(0), tiny_cfg, 4)
+    task_b = FedTask.create(jax.random.key(1), tiny_cfg, 4)
+    cache = JitCache(maxsize=4)
+    key = ("celora", 1e-2, 4, 8, 0.5, "vmap")
+    fn_a = cache.get_or_build((task_a.base, task_a.cfg), key, lambda: object())
+    fn_b = cache.get_or_build((task_b.base, task_b.cfg), key, lambda: object())
+    assert fn_a is not fn_b
+    assert len(cache) == 2
