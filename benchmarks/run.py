@@ -39,6 +39,7 @@ BENCHES = {}
 def _register():
     import beyond_selfweight
     import fed_comm
+    import fed_compress
     import fed_partial
     import fed_scale
     import fed_scan
@@ -68,6 +69,8 @@ def _register():
         "fed_partial": fed_partial.main,          # partial participation (ours)
         "fed_scale": fed_scale.main,              # client-dispatch scaling (ours)
         "fed_scan": fed_scan.main,                # eager vs scan engine (ours)
+        "fed_compress":                           # uplink codec sweep (ours)
+            lambda quick: fed_compress.main(["--quick"] if quick else []),
         "roofline": _roofline,                    # §Roofline (ours)
     })
 

@@ -2,7 +2,14 @@
 
 No orbax offline; this is deliberately simple but complete: saves/restores
 arbitrary nested dict/tuple/list pytrees of jnp arrays with dtype and
-structure preserved, plus atomic write (tmp + rename).
+structure preserved, plus atomic write (tmp + rename).  That includes the
+compressed runtime's error-feedback carry (DESIGN.md §10): the f32 EF
+residual inside the stacked client state, and the codec wire dtypes
+(int8/uint8 codes, bf16 scales) round-trip bit-for-bit
+(tests/test_checkpoint.py::test_roundtrip_ef_carry).  Whether a stored
+state may be RESUMED is the caller's contract: the scan engines put
+``uplink_codec`` in the metadata fingerprint and refuse a resume across a
+codec change (repro.core.fed_engine / repro.launch.train).
 """
 from __future__ import annotations
 

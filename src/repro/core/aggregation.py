@@ -19,6 +19,11 @@ C payloads (out_i = Σ_j W[i,j]·C_j); ``fedavg`` / ``fedavg_stacked`` are the
 FedPETuning baseline (sample-count weighted mean, one global result).  The
 list forms stack internally and delegate to the stacked forms.
 
+Under a quantized uplink (``FedConfig.uplink_codec``, DESIGN.md §10) every
+aggregator consumes the DEQUANTIZED payloads — the runtime decodes before
+calling in here, so eqn (3) / FedAvg mix real values and nothing in this
+module needs to know codes from floats.
+
 Every function here is pure jnp with no Python branching on array VALUES
 (``participants`` masks and sample counts may be traced arrays), so the
 stacked aggregators trace unchanged inside the compiled multi-round

@@ -20,6 +20,18 @@ cost nothing: the drop happens before upload.  Strategies with
 Works on concrete arrays and on ``jax.eval_shape`` outputs
 (ShapeDtypeStruct), so analytic benchmarks can account full-size models
 without materializing them.
+
+Compressed uplinks (``FedConfig.uplink_codec``, DESIGN.md §10): uplink
+bytes are priced on the ENCODED payload pytree — the ``{"codes": …,
+"scales": …}`` wire tree produced by :func:`repro.core.compress.encode`
+— never on the dequantized tensors the server aggregates.  The DOWNLINK
+is NOT encoded: the server broadcasts full-precision aggregates, so
+downlink bytes stay the raw payload bytes (the up/down mirror above
+holds only for the identity codec — :func:`round_comm_compressed_*`).
+Nothing here is codec-specific: the same ``Σ leaf.size · itemsize`` over
+whatever pytree actually crosses the wire (int8/uint8 codes and bf16
+scales included), so the accounting cannot flatter a codec by ignoring
+its scale overhead.
 """
 from __future__ import annotations
 
@@ -114,6 +126,31 @@ def round_comm_payloads(payloads: Any) -> RoundComm:
     up_b = sum(tree_bytes(p) for p in payloads if p is not None)
     up_e = sum(tree_elems(p) for p in payloads if p is not None)
     return RoundComm(up_b, up_b, up_e)
+
+
+def round_comm_compressed_stacked(enc: Any, payload: Any,
+                                  n_participants: int) -> RoundComm:
+    """Compressed-uplink accounting from stacked trees (leaves (m, …)):
+    uplink priced on the ENCODED wire pytree ``enc``, downlink on the raw
+    ``payload`` — the server dequantizes before aggregating and broadcasts
+    FULL-PRECISION aggregates, so the downlink does not shrink with the
+    codec (DESIGN.md §10)."""
+    if payload is None:
+        return RoundComm.zero()
+    return RoundComm(n_participants * stacked_per_client_bytes(enc),
+                     n_participants * stacked_per_client_bytes(payload),
+                     n_participants * stacked_per_client_elems(enc))
+
+
+def round_comm_compressed_payloads(encs: Any, payloads: Any) -> RoundComm:
+    """List-form (loop path) variant of
+    :func:`round_comm_compressed_stacked`: per-participant encoded uplink
+    trees and raw downlink payload trees."""
+    if payloads is None:
+        return RoundComm.zero()
+    return RoundComm(sum(tree_bytes(e) for e in encs if e is not None),
+                     sum(tree_bytes(p) for p in payloads if p is not None),
+                     sum(tree_elems(e) for e in encs if e is not None))
 
 
 def client_payload_bytes(strategy, state: Any) -> int:

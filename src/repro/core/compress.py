@@ -1,0 +1,242 @@
+"""Quantized uplink compression with error feedback (DESIGN.md §10).
+
+CE-LoRA's r×r payload already cuts wire traffic ~27x against full-LoRA
+FedAvg; this module multiplies that by the PAYLOAD PRECISION axis: the
+uplink is encoded with a lossy codec before it crosses the wire, the
+server dequantizes before aggregating (eqn 3 / FedAvg), and the byte
+accounting (:mod:`repro.core.comm`) prices the ENCODED pytree — codes
+plus scales — not the dequantized tensors.
+
+Codec registry (``FedConfig.uplink_codec``):
+
+* ``"none"`` — identity.  The runtime takes its legacy path untouched:
+  no error-feedback state, raw payload on the wire, bit-for-bit the
+  pre-codec behavior in both engines.
+* ``"bf16"`` — round-to-nearest bfloat16 cast, no scales.  2 bytes/elem.
+* ``"int8"`` — per-tile absmax scaling + STOCHASTIC rounding to 8-bit
+  two's-complement codes in [-127, 127].  1 byte/elem + one bf16 scale
+  per tile.
+* ``"int4"`` — as int8 with codes in [-7, 7], two codes packed per byte
+  (low nibble = even element, high nibble = odd).  ~0.56 bytes/elem.
+
+Wire format (int codecs), per payload leaf: the leaf is flattened,
+padded with zeros to ``n_tiles`` tiles of ``tile = min(64, n)`` elements
+(int4 additionally rounds the tile up to even so nibble pairs never
+straddle a tile), quantized per tile against ``scale = absmax/qmax``
+(stored in bf16; the encoder divides by the same bf16-rounded scale the
+decoder multiplies by, so the pair is self-consistent), and shipped as
+``{"codes": int8|uint8 (n_tiles, tile[/2]), "scales": bf16 (n_tiles,)}``.
+Dequantization error is bounded per element by ~1.3·scale of its tile
+(one stochastic-rounding step plus the bf16 scale rounding; asserted in
+tests/test_compress.py).
+
+Stochastic rounding draws ``floor(q + u)``, ``u ~ U[0, 1)``, from a
+PER-CLIENT, PER-ROUND key stream (:func:`client_keys` — fold_in chain
+seed → round → client), so the loop / vmap / shard paths and both
+engines draw identical bits, and E[dequant] equals the true value.
+
+Error feedback: each communicating client carries a residual ``e`` (same
+structure as its uplink payload, f32) in its state.  Per round it
+uplinks ``Q(payload + e)`` and keeps ``e' = (payload + e) − dequant``;
+because each round's transmitted value carries the previous round's
+quantization error, the per-round bias telescopes instead of
+accumulating: ``Σ_t dequant_t = Σ_t payload_t − e_T`` exactly (up to
+float association — the telescope property of tests/test_compress.py).
+The residual updates only for clients whose upload was DELIVERED (the
+post-straggler participants); stragglers and unsampled clients keep
+their residual for the next attempt.  In the scan engine the residual
+rides in the scanned carry as part of the stacked client state, so it is
+checkpointed and restored with everything else — and a resume across a
+codec change is refused via the config fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Tile extent for per-tile scales (elements of the flattened leaf).
+TILE = 64
+
+# fold_in tag separating the codec's RNG stream from every other
+# seed-derived stream in the repo (data loaders, CKA probes, privacy).
+_KEY_TAG = 0x51C0DE
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One uplink codec.  ``qmax`` is the integer code range (None for the
+    cast codecs); ``pack`` packs two 4-bit codes per byte."""
+    name: str
+    qmax: Optional[int] = None
+    pack: bool = False
+
+    @property
+    def is_identity(self) -> bool:
+        return self.name == "none"
+
+
+CODECS: dict[str, Codec] = {
+    "none": Codec("none"),
+    "bf16": Codec("bf16"),
+    "int8": Codec("int8", qmax=127),
+    "int4": Codec("int4", qmax=7, pack=True),
+}
+
+
+def get_codec(name: str) -> Codec:
+    if name not in CODECS:
+        raise ValueError(f"unknown uplink_codec {name!r}; "
+                         f"known: {sorted(CODECS)}")
+    return CODECS[name]
+
+
+# ---------------------------------------------------------------------------
+# per-leaf quantize / dequantize (pure, jittable, vmappable)
+# ---------------------------------------------------------------------------
+
+def _leaf_tile(n: int, pack: bool) -> int:
+    """Tile extent for an n-element leaf: TILE, shrunk to the leaf when the
+    leaf is smaller (so tiny r×r payloads don't pay TILE-padding bytes),
+    rounded up to even for the nibble-packed codec."""
+    if pack:
+        return min(TILE, n + (n % 2))        # TILE itself is even
+    return min(TILE, n)
+
+
+def _quant_leaf(x: jnp.ndarray, key: jax.Array, qmax: int, pack: bool
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One leaf → (codes, scales).  codes: int8 (n_tiles, tile), or uint8
+    (n_tiles, tile/2) nibble-packed; scales: bf16 (n_tiles,)."""
+    n = int(x.size)
+    tile = _leaf_tile(n, pack)
+    n_tiles = -(-n // tile)
+    flat = x.reshape(-1).astype(jnp.float32)
+    padding = n_tiles * tile - n
+    if padding:
+        flat = jnp.concatenate([flat, jnp.zeros((padding,), jnp.float32)])
+    t = flat.reshape(n_tiles, tile)
+    amax = jnp.max(jnp.abs(t), axis=1)
+    scales = (amax / qmax).astype(jnp.bfloat16)          # the STORED scale
+    s = jnp.maximum(scales.astype(jnp.float32), 1e-12)[:, None]
+    u = jax.random.uniform(key, t.shape)                 # stochastic rounding
+    codes = jnp.clip(jnp.floor(t / s + u), -qmax, qmax).astype(jnp.int8)
+    if pack:
+        lo = codes[:, 0::2].astype(jnp.uint8) & 0xF
+        hi = (codes[:, 1::2].astype(jnp.uint8) & 0xF) << 4
+        codes = lo | hi
+    return codes, scales
+
+
+def _dequant_leaf(codes: jnp.ndarray, scales: jnp.ndarray, shape: tuple,
+                  pack: bool) -> jnp.ndarray:
+    """Inverse of :func:`_quant_leaf` (up to the quantization error)."""
+    if pack:
+        lo = (codes & 0xF).astype(jnp.int32)
+        hi = (codes >> 4).astype(jnp.int32)
+        lo = jnp.where(lo > 7, lo - 16, lo)              # sign-extend nibbles
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        c = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
+    else:
+        c = codes.astype(jnp.int32)
+    vals = c.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    n = int(math.prod(shape)) if shape else 1
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# tree-level encode / decode
+# ---------------------------------------------------------------------------
+
+def encode(codec: Codec, tree: Any, key: jax.Array) -> dict:
+    """Encode ONE client's payload pytree → ``{"codes": …, "scales": …}``
+    (the wire pytree: :func:`repro.core.comm.tree_bytes` of it IS the
+    uplink cost).  The cast codecs carry no scales (empty subtree)."""
+    if codec.is_identity:
+        return {"codes": tree, "scales": {}}
+    if codec.name == "bf16":
+        return {"codes": jax.tree.map(lambda l: l.astype(jnp.bfloat16), tree),
+                "scales": {}}
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    quantized = [_quant_leaf(l, k, codec.qmax, codec.pack)
+                 for l, k in zip(leaves, keys)]
+    return {"codes": jax.tree.unflatten(treedef, [c for c, _ in quantized]),
+            "scales": jax.tree.unflatten(treedef, [s for _, s in quantized])}
+
+
+def decode(codec: Codec, enc: dict, like: Any) -> Any:
+    """Decode a wire pytree back to the payload structure/dtype of ``like``
+    (arrays or ShapeDtypeStructs) — what the SERVER aggregates."""
+    if codec.is_identity:
+        return enc["codes"]
+    if codec.name == "bf16":
+        return jax.tree.map(lambda c, l: c.astype(l.dtype),
+                            enc["codes"], like)
+    likes, treedef = jax.tree.flatten(like)
+    codes = jax.tree.flatten(enc["codes"])[0]
+    scales = jax.tree.flatten(enc["scales"])[0]
+    vals = [_dequant_leaf(c, s, l.shape, codec.pack).astype(l.dtype)
+            for c, s, l in zip(codes, scales, likes)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# error feedback + the per-client key stream
+# ---------------------------------------------------------------------------
+
+def init_ef(payload: Any) -> Any:
+    """Fresh error-feedback residual: zeros, payload structure, f32."""
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), payload)
+
+
+def client_key(seed: int, rnd, i) -> jax.Array:
+    """The (round, client) stochastic-rounding key.  ``rnd``/``i`` may be
+    traced, so the same derivation runs inside the scan engine."""
+    rk = jax.random.fold_in(jax.random.fold_in(jax.random.key(seed),
+                                               _KEY_TAG), rnd)
+    return jax.random.fold_in(rk, i)
+
+
+def client_keys(seed: int, rnd, m: int) -> jax.Array:
+    """All m clients' keys for one round — elementwise identical to
+    :func:`client_key` per client (loop ⇄ vmap parity)."""
+    return jax.vmap(lambda i: client_key(seed, rnd, i))(jnp.arange(m))
+
+
+def encode_client(codec: Codec, payload: Any, ef: Any, key: jax.Array
+                  ) -> tuple[dict, Any, Any]:
+    """One client's error-compensated uplink step:
+
+        v = payload + e;  wire = Q(v);  served = dequant(wire);
+        e' = v − served
+
+    Returns ``(wire, served, e')``.  The caller prices bytes on ``wire``,
+    aggregates ``served``, and installs ``e'`` only if the upload was
+    delivered (participants)."""
+    v = jax.tree.map(lambda p, e: p.astype(jnp.float32) + e, payload, ef)
+    enc = encode(codec, v, key)
+    dec = decode(codec, enc, v)
+    ef_new = jax.tree.map(lambda a, b: a - b, v, dec)
+    return enc, dec, ef_new
+
+
+def encode_stacked(codec: Codec, payload: Any, ef: Any, keys: jax.Array
+                   ) -> tuple[dict, Any, Any]:
+    """Stacked-state variant of :func:`encode_client`: every leaf carries a
+    leading client axis (m, …), ``keys`` is the (m,) key stack.  One vmap —
+    bitwise the per-client results, traced once."""
+    return jax.vmap(lambda p, e, k: encode_client(codec, p, e, k))(
+        payload, ef, keys)
+
+
+def wire_struct(codec: Codec, payload_struct: Any, m: int) -> Any:
+    """``jax.eval_shape`` of the stacked wire pytree — how the scan engine
+    prices a whole run's traffic without touching the device (the encoded
+    structure is round-invariant)."""
+    return jax.eval_shape(
+        lambda p: encode_stacked(codec, p, p, client_keys(0, 0, m))[0],
+        payload_struct)

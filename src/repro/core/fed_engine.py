@@ -41,6 +41,15 @@ refreshes only the sampled rows/columns, which is precisely the eager
 cache's semantics (unsampled pairs' Cs are frozen, so their cached CKA
 stays exact).
 
+Compressed uplinks (``FedConfig.uplink_codec``, DESIGN.md §10): the
+round_step encodes the payload with the codec's pure jittable
+encode/decode, the error-feedback residual joins the scanned carry as
+part of the stacked client state (so it is checkpointed with everything
+else), aggregation and the CKA row refresh consume the DEQUANTIZED
+payload, and traffic is priced host-side on the ENCODED pytree's
+``eval_shape`` — the same eager⇄scan equivalence contract holds for
+every codec (tests/test_compress.py).
+
 Checkpoint/resume: at every chunk boundary the full federated state
 (stacked client states, S^model carry, per-round history) is written
 atomically via :mod:`repro.checkpoint.ckpt` with the run fingerprint in
@@ -61,7 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core import aggregation, client_batch, comm, sampling, tri_lora
+from repro.core import (aggregation, client_batch, comm, compress, sampling,
+                        tri_lora)
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka
 
@@ -69,12 +79,14 @@ _SCAN_CACHE = JitCache(maxsize=8)
 
 # FedConfig fields that must match between a checkpoint and the run
 # resuming from it — anything that changes the per-round math or the
-# participation plans makes the stored state meaningless.
+# participation plans makes the stored state meaningless.  uplink_codec is
+# here because the EF residual in the stored state is meaningful only under
+# the codec that produced it: resuming across a codec change is refused.
 _FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
                        "batch_size", "lr", "seed", "participation",
                        "sampler", "straggler_frac", "use_data_sim",
                        "use_model_sim", "cka_probes", "self_weight",
-                       "pfedme_eta")
+                       "pfedme_eta", "uplink_codec")
 
 
 def _fingerprint(fed) -> dict:
@@ -91,10 +103,14 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
     veval = jax.vmap(eval_one)
     eta = fed.pfedme_eta
     self_weight = fed.self_weight
+    codec = compress.get_codec(fed.uplink_codec)
+    compressed = not codec.is_identity and strategy.aggregate != "none"
+    seed = fed.seed
+    m = fed.n_clients
 
     def round_step(carry, xs, consts):
         stacked, s_model = carry
-        toks, labs, smask, pmask, sampled_ids = xs
+        toks, labs, smask, pmask, sampled_ids, rnd = xs
         tr = strategy.trainable(stacked)
         w_ref = stacked.get("w", {})
         # all m always train (static shapes); the select below freezes the
@@ -107,20 +123,35 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
         stacked = client_batch.select_clients(smask, new, prev)
 
         payload = strategy.uplink(stacked)
+        if compressed:
+            # error-compensated quantized uplink (DESIGN.md §10): the same
+            # per-(round, client) key stream as the eager engine, the EF
+            # residual joining the scanned carry via the stacked state, the
+            # server consuming the DEQUANTIZED payload
+            _, dec, ef_new = compress.encode_stacked(
+                codec, payload, stacked["ef"],
+                compress.client_keys(seed, rnd, m))
+            stacked = dict(stacked, ef=client_batch.select_clients(
+                pmask, ef_new, stacked["ef"]))
+            served = dec
+        else:
+            served = payload
         weights = None
         if strategy.aggregate == "personalized":
             sims = []
             if use_data:
                 sims.append(consts["s_data"])
             if use_model:
-                cs = cka.stacked_cs(tri_lora.tree_payload(stacked["adapter"]))
+                cs = cka.stacked_cs(
+                    served if compressed
+                    else tri_lora.tree_payload(stacked["adapter"]))
                 s_model = cka.refresh_rows_inline(s_model, cs, sampled_ids,
                                                   consts["probes"])
                 sims.append(s_model)
             assert sims, "celora needs at least one similarity term"
             weights = aggregation.personalized_weights(sum(sims), self_weight,
                                                        pmask)
-        down = strategy.server_stacked(payload,
+        down = strategy.server_stacked(served,
                                        sample_counts=consts["counts"],
                                        weights=weights, participants=pmask)
         if down is not None:
@@ -161,6 +192,7 @@ def _load_state(fed, stacked, s_model, m: int):
         raise ValueError(f"{fed.checkpoint_path!r} is not a scan-engine "
                          f"checkpoint (no rounds_done in metadata)")
     want = _fingerprint(fed)
+    meta.setdefault("uplink_codec", "none")       # pre-codec checkpoints
     stale = {k: (meta.get(k), v) for k, v in want.items()
              if k != "rounds" and meta.get(k) != v}
     if stale:
@@ -206,8 +238,19 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         stacked = put(stacked)
 
     pstack = sampling.stack_plans(plans, m)
+    codec = compress.get_codec(fed.uplink_codec)
+    compressed = not codec.is_identity and strategy.aggregate != "none"
+    # uplink bytes are priced on the ENCODED payload pytree (codes +
+    # scales); the downlink stays the raw payload (the server broadcasts
+    # full-precision aggregates).  Both structures are round-invariant, so
+    # eval_shape gives the per-client constants without any device work.
+    payload_struct = jax.eval_shape(strategy.uplink, stacked)
+    per_down_b, _ = comm.per_client_comm(payload_struct)
     per_b, per_e = comm.per_client_comm(
-        jax.eval_shape(strategy.uplink, stacked))
+        compress.wire_struct(codec, payload_struct, m)
+        if compressed and payload_struct is not None else payload_struct)
+    if not compressed:
+        per_down_b = per_b
 
     personalized = strategy.aggregate == "personalized"
     use_data = personalized and fed.use_data_sim and s_data is not None
@@ -234,7 +277,11 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
     run_chunk = _SCAN_CACHE.get_or_build(
         (task.base, task.cfg),
         ("scan", strategy.name, fed.lr, fed.local_steps, fed.batch_size,
-         fed.pfedme_eta, fed.self_weight, use_data, use_model, mode),
+         fed.pfedme_eta, fed.self_weight, use_data, use_model, mode,
+         # the traced program depends on the seed only through the codec's
+         # in-graph key stream; keying on it for codec="none" would force a
+         # pointless recompile per seed in variance sweeps
+         fed.uplink_codec, fed.seed if compressed else None),
         lambda: _build_chunk_fn(strategy, fed, local_fit, eval_one,
                                 use_data, use_model))
 
@@ -275,7 +322,8 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         xs = (toks, labs,
               jnp.asarray(pstack.sampled_mask[c0:c1]),
               jnp.asarray(pstack.participant_mask[c0:c1]),
-              jnp.asarray(pstack.sampled_ids[c0:c1]))
+              jnp.asarray(pstack.sampled_ids[c0:c1]),
+              jnp.arange(c0, c1, dtype=jnp.int32))
         carry, (losses, accs) = run_chunk(carry, xs, consts)
         losses = np.asarray(losses)         # the chunk's ONE host sync
         accs = np.asarray(accs)
@@ -296,7 +344,7 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         RoundRecord(
             rnd, hist_loss[rnd], hist_accs[rnd],
             uplink_bytes=per_b * int(pstack.n_participants[rnd]),
-            downlink_bytes=per_b * int(pstack.n_participants[rnd]),
+            downlink_bytes=per_down_b * int(pstack.n_participants[rnd]),
             wall_s=hist_wall[rnd],
             participants=plans[rnd].participants.tolist(),
             sampled=plans[rnd].sampled.tolist(),

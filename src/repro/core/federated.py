@@ -25,6 +25,16 @@ rows for absentees reuse their last refresh.  With ``participation=1.0``
 and stragglers off the runtime is bit-for-bit the full-participation
 program (asserted in tests/test_sampling.py).
 
+Uplink compression (``FedConfig.uplink_codec``, DESIGN.md §10): the
+payload may be quantized before it crosses the wire
+(:mod:`repro.core.compress` — bf16 / int8 / int4 with per-tile scales,
+stochastic rounding, and client-side error feedback).  Bytes are priced
+on the ENCODED pytree (codes + scales); the server dequantizes before
+aggregation and before the S^model CKA refresh; the EF residual rides in
+the client state and advances only for delivered uploads.  With the
+default ``"none"`` codec every path below is bit-for-bit the
+uncompressed runtime.
+
 Client parallelism (``FedConfig.client_parallelism``)
 -----------------------------------------------------
 Selects how the m clients' local training is dispatched each round:
@@ -75,7 +85,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, client_batch, comm, sampling, tri_lora
+from repro.core import (aggregation, client_batch, comm, compress, sampling,
+                        tri_lora)
 from repro.core.baselines import Strategy, get_strategy
 from repro.core.fed_model import FedTask
 from repro.core.jit_cache import JitCache
@@ -111,6 +122,8 @@ class FedConfig:
     chunk_rounds: int = 8             # scan: rounds fused per dispatch
     checkpoint_path: Optional[str] = None  # scan: state file, chunk cadence
     resume: bool = False              # scan: restore checkpoint_path first
+    # --- uplink compression (repro.core.compress, DESIGN.md §10) -----------
+    uplink_codec: str = "none"        # "none" | "bf16" | "int8" | "int4"
     # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
     participation: float = 1.0        # fraction of clients sampled per round
     sampler: str = "uniform"          # "uniform" | "weighted" | "round_robin"
@@ -258,9 +271,20 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         raise ValueError(f"straggler_frac must be in [0, 1); "
                          f"got {fed.straggler_frac}")
     assert len(client_train) == m
+    codec = compress.get_codec(fed.uplink_codec)  # validates the codec name
+    # compression is active only when something crosses the wire; with the
+    # identity codec the runtime below takes its legacy paths untouched
+    # (bit-for-bit the pre-codec behavior, no EF state)
+    compressed = not codec.is_identity and strategy.aggregate != "none"
     key = jax.random.key(fed.seed)
     ckeys = jax.random.split(key, m)
     states = [strategy.init_state(task.init_client(ckeys[i])) for i in range(m)]
+    if compressed:
+        # error-feedback residual joins the client state (uplink structure,
+        # zeros) — carried through select/install, checkpointed by the scan
+        # engine, returned with the final states
+        states = [dict(s, ef=compress.init_ef(strategy.uplink(s)))
+                  for s in states]
     loaders = [Loader(client_train[i], fed.batch_size, seed=fed.seed + i)
                for i in range(m)]
     sample_counts = [len(d["labels"]) for d in client_train]
@@ -419,15 +443,32 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             # uplink trees for all m (a local op; absentees carry their
             # last-uploaded value) — masks below zero out the absent columns
             payloads = [strategy.uplink(s) for s in states]
-            rc = comm.round_comm_payloads(
-                [payloads[i] for i in plan.participants])
+            if compressed:
+                # encode for all m (key stream aligned with the vectorized
+                # paths); bytes are priced on the participants' ENCODED
+                # pytrees; the server consumes the DEQUANTIZED payloads;
+                # the EF residual advances only for delivered uploads
+                encoded = [compress.encode_client(
+                    codec, payloads[i], states[i]["ef"],
+                    compress.client_key(fed.seed, rnd, i)) for i in range(m)]
+                rc = comm.round_comm_compressed_payloads(
+                    [encoded[i][0] for i in plan.participants],
+                    [payloads[i] for i in plan.participants])
+                served = [e[1] for e in encoded]
+                for i in plan.participants:
+                    states[i] = dict(states[i], ef=encoded[i][2])
+            else:
+                served = payloads
+                rc = comm.round_comm_payloads(
+                    [payloads[i] for i in plan.participants])
             weights = None
             if strategy.aggregate == "personalized":
+                cs_trees = (served if compressed else
+                            [tri_lora.tree_payload(s["adapter"])
+                             for s in states])
                 weights = personalized(lambda: model_sim_from_cs(
-                    cka.stack_client_cs(
-                        [tri_lora.tree_payload(s["adapter"])
-                         for s in states]), plan), cmask)
-            downs = strategy.server(payloads, sample_counts=sample_counts,
+                    cka.stack_client_cs(cs_trees), plan), cmask)
+            downs = strategy.server(served, sample_counts=sample_counts,
                                     weights=weights, participants=cmask)
             for i in plan.participants:
                 states[i] = strategy.install(states[i], downs[i])
@@ -471,14 +512,27 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                 stacked = strategy.after_local(stacked, fed.pfedme_eta)
 
             payload = strategy.uplink(stacked)       # stacked tree or None
-            rc = comm.round_comm_stacked(payload, plan.n_participants)
             cmask = jnp.asarray(plan.mask(m)) if partial else None
+            if compressed:
+                enc, dec, ef_new = compress.encode_stacked(
+                    codec, payload, stacked["ef"],
+                    compress.client_keys(fed.seed, rnd, m))
+                rc = comm.round_comm_compressed_stacked(
+                    enc, payload, plan.n_participants)
+                stacked = dict(stacked, ef=(
+                    client_batch.select_clients(cmask, ef_new, stacked["ef"])
+                    if partial else ef_new))
+                served = dec
+            else:
+                rc = comm.round_comm_stacked(payload, plan.n_participants)
+                served = payload
             weights = None
             if strategy.aggregate == "personalized":
+                cs_src = (served if compressed
+                          else tri_lora.tree_payload(stacked["adapter"]))
                 weights = personalized(lambda: model_sim_from_cs(
-                    cka.stacked_cs(tri_lora.tree_payload(stacked["adapter"])),
-                    plan), cmask)
-            down = strategy.server_stacked(payload,
+                    cka.stacked_cs(cs_src), plan), cmask)
+            down = strategy.server_stacked(served,
                                            sample_counts=sample_counts,
                                            weights=weights,
                                            participants=cmask)

@@ -24,6 +24,14 @@ post-straggler participants, and the reported communication is the exact
 per-round uplink/downlink BYTES of the participants' payloads
 (:mod:`repro.core.comm`).
 
+Uplink compression (DESIGN.md §10): ``--uplink-codec {bf16,int8,int4}``
+quantizes the payload before it crosses the wire (per-tile scales,
+stochastic rounding, client-side error feedback —
+:mod:`repro.core.compress`); bytes are reported for the ENCODED pytree
+and the server aggregates the dequantized payloads.  Works under both
+engines; the EF residual is checkpointed and a resume across a codec
+change is refused.
+
 Compiled rounds (DESIGN.md §9): ``--engine scan`` fuses local fit, select,
 similarity, aggregation, and install into one jitted round step and scans
 it over ``--chunk-rounds`` rounds per dispatch, checkpointing the full
@@ -44,7 +52,8 @@ import numpy as np
 
 from repro.checkpoint import metadata as ckpt_metadata
 from repro.checkpoint import restore, save
-from repro.core import aggregation, client_batch, comm, sampling, tri_lora
+from repro.core import (aggregation, client_batch, comm, compress, sampling,
+                        tri_lora)
 from repro.core.similarity import cka
 from repro.data import synthetic
 from repro.models import model
@@ -59,7 +68,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         reduced: bool = False, client_parallelism: str = "vmap",
         participation: float = 1.0, sampler: str = "uniform",
         straggler_frac: float = 0.0, engine: str = "eager",
-        chunk_rounds: int = 8, resume: bool = False) -> dict:
+        chunk_rounds: int = 8, resume: bool = False,
+        uplink_codec: str = "none") -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
     assert engine in ("eager", "scan"), engine
     vectorized = client_parallelism == "vmap"
@@ -91,6 +101,14 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
     adapters = [model.init_params(cfg, jax.random.key(seed + i))["adapter"]
                 for i in range(clients)]
     opt = adamw(lr=lr)
+
+    # uplink compression (repro.core.compress, DESIGN.md §10): encode the
+    # payload before pricing bytes, dequantize before aggregation, carry the
+    # error-feedback residual per client; inactive for the identity codec
+    # and for non-communicating methods
+    codec = compress.get_codec(uplink_codec)
+    compressed = not codec.is_identity and method in ("celora", "fedavg")
+    payload_of = tri_lora.tree_payload if method == "celora" else (lambda t: t)
 
     def _local_fit(adapter, toks, labs):
         state = opt.init(adapter)
@@ -134,10 +152,14 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             cfg=cfg, local_fit_raw=_local_fit, draw=_draw,
             stacked=stacked, plans=plans, method=method, clients=clients,
             rounds=rounds, chunk_rounds=chunk_rounds, seed=seed,
-            ckpt=ckpt, resume=resume, verbose=verbose)
+            ckpt=ckpt, resume=resume, verbose=verbose,
+            codec=codec, compressed=compressed, payload_of=payload_of)
         return {"history": history, "adapters": adapters, "cfg": cfg,
                 "base": base}
 
+    if compressed:
+        ef = (compress.init_ef(payload_of(stacked)) if vectorized
+              else [compress.init_ef(payload_of(a)) for a in adapters])
     history = []
     for rnd in range(rounds):
         t0 = time.time()
@@ -163,43 +185,73 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
                 losses.append(float(ls[-1]))
 
         rc = comm.RoundComm.zero()
+        if compressed and vectorized:
+            # encode once per round: bytes priced on the ENCODED pytree,
+            # the server consumes the dequantized payload, EF advances for
+            # delivered uploads only
+            payload = payload_of(stacked)
+            enc, served, ef_new = compress.encode_stacked(
+                codec, payload, ef, compress.client_keys(seed, rnd, clients))
+            rc = comm.round_comm_compressed_stacked(enc, payload,
+                                                    plan.n_participants)
+            ef = (client_batch.select_clients(cmask, ef_new, ef)
+                  if partial else ef_new)
+        elif compressed:
+            payloads = [payload_of(a) for a in adapters]
+            encoded = [compress.encode_client(
+                codec, payloads[i], ef[i],
+                compress.client_key(seed, rnd, i)) for i in range(clients)]
+            rc = comm.round_comm_compressed_payloads(
+                [encoded[i][0] for i in plan.participants],
+                [payloads[i] for i in plan.participants])
+            served_list = [e[1] for e in encoded]
+            for i in plan.participants:
+                ef[i] = encoded[i][2]
         if method == "celora":
             if vectorized:
-                payload = tri_lora.tree_payload(stacked)
-                rc = comm.round_comm_stacked(payload, plan.n_participants)
+                if not compressed:
+                    served = tri_lora.tree_payload(stacked)
+                    rc = comm.round_comm_stacked(served,
+                                                 plan.n_participants)
                 s_model = cka.pairwise_model_similarity_stacked(
-                    payload, jax.random.key(seed + 99), 32)
+                    served, jax.random.key(seed + 99), 32)
                 w = aggregation.personalized_weights(s_model,
                                                      participants=cmask)
-                mixed = aggregation.aggregate_stacked(payload, w)
+                mixed = aggregation.aggregate_stacked(served, w)
                 installed = tri_lora.tree_load_payload(stacked, mixed)
                 stacked = (client_batch.select_clients(cmask, installed,
                                                        stacked)
                            if partial else installed)
             else:
-                payloads = [tri_lora.tree_payload(a) for a in adapters]
-                rc = comm.round_comm_payloads(
-                    [payloads[i] for i in plan.participants])
+                if not compressed:
+                    served_list = [tri_lora.tree_payload(a) for a in adapters]
+                    rc = comm.round_comm_payloads(
+                        [served_list[i] for i in plan.participants])
                 s_model = cka.pairwise_model_similarity(
-                    payloads, jax.random.key(seed + 99), 32)
+                    served_list, jax.random.key(seed + 99), 32)
                 w = aggregation.personalized_weights(s_model,
                                                      participants=cmask)
-                downs = aggregation.aggregate_payloads(payloads, w)
+                downs = aggregation.aggregate_payloads(served_list, w)
                 for i in plan.participants:
                     adapters[i] = tri_lora.tree_load_payload(adapters[i],
                                                              downs[i])
         elif method == "fedavg":
             if vectorized:
-                rc = comm.round_comm_stacked(stacked, plan.n_participants)
-                g = aggregation.fedavg_stacked(stacked, [1] * clients, cmask)
+                if not compressed:
+                    served = stacked
+                    rc = comm.round_comm_stacked(served,
+                                                 plan.n_participants)
+                g = aggregation.fedavg_stacked(served, [1] * clients, cmask)
                 bc = client_batch.broadcast_to_clients(g, clients)
                 stacked = (client_batch.select_clients(cmask, bc, stacked)
                            if partial else bc)
             else:
-                payloads = [jax.tree.map(lambda x: x, a) for a in adapters]
-                rc = comm.round_comm_payloads(
-                    [payloads[i] for i in plan.participants])
-                g = aggregation.fedavg(payloads, [1] * clients, cmask)
+                if not compressed:
+                    served_list = [jax.tree.map(lambda x: x, a)
+                                   for a in adapters]
+                    rc = comm.round_comm_payloads(
+                        [served_list[i] for i in plan.participants])
+                g = aggregation.fedavg(served_list, [1] * clients, cmask)
                 for i in plan.participants:
                     adapters[i] = jax.tree.map(lambda x: x, g)
 
@@ -229,44 +281,67 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
 
 def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                  clients: int, rounds: int, chunk_rounds: int, seed: int,
-                 ckpt: str | None, resume: bool, verbose: bool):
+                 ckpt: str | None, resume: bool, verbose: bool,
+                 codec=None, compressed: bool = False, payload_of=None):
     """Compiled LM rounds: one jitted ``lax.scan`` dispatch per chunk of
     rounds (mirrors :mod:`repro.core.fed_engine` for the classification
     runtime; DESIGN.md §9).  Checkpoints the full stacked adapter state at
     chunk boundaries; ``resume`` restores it, fast-forwards the data
-    streams, and continues bit-for-bit."""
+    streams, and continues bit-for-bit.  With an active ``codec`` the
+    error-feedback residual joins the scanned carry and the checkpoint, and
+    bytes are priced on the encoded pytree (DESIGN.md §10)."""
     chunk = max(1, int(chunk_rounds))
     vfit = jax.vmap(local_fit_raw)
     pstack = sampling.stack_plans(plans, clients)
+    codec = codec or compress.get_codec("none")
+    payload_of = payload_of or (lambda t: t)
     if method == "celora":
-        per_b, per_e = comm.per_client_comm(
-            jax.eval_shape(tri_lora.tree_payload, stacked))
+        payload_struct = jax.eval_shape(tri_lora.tree_payload, stacked)
     elif method == "fedavg":
-        per_b, per_e = comm.per_client_comm(stacked)
+        payload_struct = jax.eval_shape(lambda t: t, stacked)
     else:
-        per_b, per_e = 0, 0
+        payload_struct = None
+    if payload_struct is None:
+        per_b, per_e, per_down_b = 0, 0, 0
+    elif compressed:
+        # uplink priced on the encoded pytree; downlink stays the raw
+        # payload (the server broadcasts full-precision aggregates)
+        per_b, per_e = comm.per_client_comm(
+            compress.wire_struct(codec, payload_struct, clients))
+        per_down_b, _ = comm.per_client_comm(payload_struct)
+    else:
+        per_b, per_e = comm.per_client_comm(payload_struct)
+        per_down_b = per_b
+    ef = compress.init_ef(payload_of(stacked)) if compressed else {}
 
-    def round_step(stk, xs):
-        toks, labs, smask, pmask = xs
+    def round_step(carry, xs):
+        stk, ef = carry
+        toks, labs, smask, pmask, rnd = xs
         new, ls = vfit(stk, toks, labs)
         stk = client_batch.select_clients(smask, new, stk)
+        if compressed:
+            _, served, ef_new = compress.encode_stacked(
+                codec, payload_of(stk), ef,
+                compress.client_keys(seed, rnd, clients))
+            ef = client_batch.select_clients(pmask, ef_new, ef)
+        else:
+            served = payload_of(stk)
         if method == "celora":
-            payload = tri_lora.tree_payload(stk)
             s_model = cka.pairwise_model_similarity_stacked(
-                payload, jax.random.key(seed + 99), 32)
+                served, jax.random.key(seed + 99), 32)
             w = aggregation.personalized_weights(s_model, participants=pmask)
-            mixed = aggregation.aggregate_stacked(payload, w)
+            mixed = aggregation.aggregate_stacked(served, w)
             stk = client_batch.select_clients(
                 pmask, tri_lora.tree_load_payload(stk, mixed), stk)
         elif method == "fedavg":
-            g = aggregation.fedavg_stacked(stk, jnp.ones(clients), pmask)
+            g = aggregation.fedavg_stacked(served, jnp.ones(clients), pmask)
             stk = client_batch.select_clients(
                 pmask, client_batch.broadcast_to_clients(g, clients), stk)
         sm = smask.astype(ls.dtype)
         loss = jnp.sum(ls[:, -1] * sm) / jnp.maximum(jnp.sum(sm), 1.0)
-        return stk, loss
+        return (stk, ef), loss
 
-    run_chunk = jax.jit(lambda stk, xs: jax.lax.scan(round_step, stk, xs))
+    run_chunk = jax.jit(lambda c, xs: jax.lax.scan(round_step, c, xs))
 
     hist_loss: list = []
     hist_wall: list = []
@@ -279,8 +354,11 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         if "rounds_done" not in meta:
             raise ValueError(f"{ckpt!r} is not a scan-engine checkpoint "
                              f"(no rounds_done in metadata)")
+        # uplink_codec is part of the fingerprint: the stored EF residual is
+        # meaningful only under the codec that produced it
         want = {"arch": cfg.name, "method": method, "clients": clients,
-                "seed": seed}
+                "seed": seed, "uplink_codec": codec.name}
+        meta.setdefault("uplink_codec", "none")   # pre-codec checkpoints
         stale = {k: (meta.get(k), v) for k, v in want.items()
                  if meta.get(k) != v}
         if stale:
@@ -290,10 +368,10 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         if start > rounds:
             raise ValueError(f"checkpoint has {start} completed rounds but "
                              f"the run asks for only {rounds}")
-        tree = restore(ckpt, {"state": stacked,
+        tree = restore(ckpt, {"state": stacked, "ef": ef,
                               "loss": np.zeros(start, np.float32),
                               "wall": np.zeros(start, np.float32)})
-        stacked = tree["state"]
+        stacked, ef = tree["state"], tree["ef"]
         hist_loss = [float(v) for v in tree["loss"]]
         hist_wall = [float(v) for v in tree["wall"]]
         for _ in range(start):          # fast-forward the data streams
@@ -302,6 +380,7 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         if verbose:
             print(f"resumed {start} rounds from {ckpt}", flush=True)
 
+    carry = (stacked, ef)
     for c0 in range(start, rounds, chunk):
         c1 = min(c0 + chunk, rounds)
         t0 = time.time()
@@ -312,27 +391,30 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                                      for rr in drawn]))
         xs = (toks, labs,
               jnp.asarray(pstack.sampled_mask[c0:c1]),
-              jnp.asarray(pstack.participant_mask[c0:c1]))
-        stacked, losses = run_chunk(stacked, xs)
+              jnp.asarray(pstack.participant_mask[c0:c1]),
+              jnp.arange(c0, c1, dtype=jnp.int32))
+        carry, losses = run_chunk(carry, xs)
         losses = np.asarray(losses)          # one host sync per chunk
         per_round = (time.time() - t0) / (c1 - c0)
         hist_loss += [float(v) for v in losses]
         hist_wall += [per_round] * (c1 - c0)
         if ckpt:
-            save(ckpt, {"state": stacked,
+            save(ckpt, {"state": carry[0], "ef": carry[1],
                         "loss": np.asarray(hist_loss, np.float32),
                         "wall": np.asarray(hist_wall, np.float32)},
                  metadata={"rounds_done": c1, "arch": cfg.name,
                            "method": method, "engine": "scan",
-                           "clients": clients, "seed": seed})
+                           "clients": clients, "seed": seed,
+                           "uplink_codec": codec.name})
         if verbose:
             print(f"rounds {c0:3d}–{c1 - 1:3d}  loss {hist_loss[-1]:.4f}  "
                   f"({per_round:.1f}s/round)", flush=True)
+    stacked = carry[0]
 
     history = [{"round": rnd, "loss": hist_loss[rnd],
                 "uplink_floats": per_e * plans[rnd].n_participants,
                 "uplink_bytes": per_b * plans[rnd].n_participants,
-                "downlink_bytes": per_b * plans[rnd].n_participants,
+                "downlink_bytes": per_down_b * plans[rnd].n_participants,
                 "participants": plans[rnd].participants.tolist(),
                 "wall_s": hist_wall[rnd]}
                for rnd in range(rounds)]
@@ -366,6 +448,10 @@ def main():
                     help="scan engine: rounds fused per dispatch")
     ap.add_argument("--resume", action="store_true",
                     help="scan engine: restore --ckpt and continue")
+    ap.add_argument("--uplink-codec", default="none",
+                    choices=["none", "bf16", "int8", "int4"],
+                    help="quantized uplink compression with error feedback "
+                         "(repro.core.compress, DESIGN.md §10)")
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
@@ -374,7 +460,8 @@ def main():
               client_parallelism=args.client_parallelism,
               participation=args.participation, sampler=args.sampler,
               straggler_frac=args.straggler_frac, engine=args.engine,
-              chunk_rounds=args.chunk_rounds, resume=args.resume)
+              chunk_rounds=args.chunk_rounds, resume=args.resume,
+              uplink_codec=args.uplink_codec)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

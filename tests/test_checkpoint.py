@@ -70,6 +70,32 @@ def test_roundtrip_stacked_state(tmp_path, name, dtype):
     assert ckpt.metadata(path) == meta
 
 
+def test_roundtrip_ef_carry(tmp_path):
+    """The compressed runtime's EF-residual carry (DESIGN.md §10) joins the
+    checkpointed state: an f32 residual tree alongside the stacked state —
+    and integer/uint8 leaves (the codec's wire dtypes) — must round-trip
+    exactly."""
+    from repro.core import compress
+    strategy = STRATEGIES["celora"]
+    keys = jax.random.split(jax.random.key(1), 3)
+    states = [_client_state(strategy, k) for k in keys]
+    states = [dict(s, ef=jax.tree.map(
+        lambda l: jax.random.normal(jax.random.key(7), l.shape) * 1e-3,
+        compress.init_ef(strategy.uplink(s)))) for s in states]
+    stacked = client_batch.stack_states(states)
+    enc = compress.encode(compress.get_codec("int4"),
+                          strategy.uplink(states[0]), jax.random.key(2))
+    tree = {"state": stacked, "wire_sample": enc}
+    path = str(tmp_path / "ef.npz")
+    ckpt.save(path, tree, metadata={"uplink_codec": "int4"})
+    out = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, out)
+    jax.tree.map(lambda a, b: (np.asarray(a).dtype == np.asarray(b).dtype)
+                 or pytest.fail(f"{a.dtype} != {b.dtype}"), tree, out)
+    assert ckpt.metadata(path)["uplink_codec"] == "int4"
+
+
 def test_restore_wrong_shape_is_clear_error(tmp_path):
     path = str(tmp_path / "s.npz")
     ckpt.save(path, {"w": jnp.zeros((4, 4))})

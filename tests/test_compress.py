@@ -1,0 +1,335 @@
+"""Quantized uplink compression (repro.core.compress, DESIGN.md §10):
+codec round-trip properties, stochastic-rounding unbiasedness, the
+error-feedback telescope, encoded-pytree byte accounting, loop⇄vmap⇄scan
+parity for every codec, codec="none" identity, and EF-carry
+checkpoint/resume (including the codec-change rejection)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, compress
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+
+# ---------------------------------------------------------------------------
+# unit: codec registry + round-trip
+# ---------------------------------------------------------------------------
+
+def test_codec_registry():
+    assert compress.get_codec("int4").pack
+    assert compress.get_codec("none").is_identity
+    with pytest.raises(ValueError, match="unknown uplink_codec"):
+        compress.get_codec("zstd")
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 4), (5,), (3, 7), (1,), (130,)])
+@pytest.mark.parametrize("codec_name", ["int8", "int4"])
+def test_roundtrip_error_bounded_by_tile_step(codec_name, shape):
+    """|dequant(quant(x)) − x| ≤ ~1.3·step per element, where step is the
+    element's tile scale (one stochastic-rounding step plus the bf16 scale
+    rounding and the clip at the tile absmax)."""
+    codec = compress.get_codec(codec_name)
+    x = jax.random.normal(jax.random.key(hash(shape) % 2**31), shape) * 3.0
+    enc = compress.encode(codec, {"x": x}, jax.random.key(1))
+    dec = compress.decode(codec, enc, {"x": x})["x"]
+    scales = np.asarray(jax.tree.leaves(enc["scales"])[0], np.float32)
+    n = x.size
+    tile = compress._leaf_tile(n, codec.pack)
+    step = np.repeat(scales, tile)[:n].reshape(shape)
+    err = np.abs(np.asarray(dec) - np.asarray(x))
+    assert np.all(err <= 1.3 * step + 1e-7), (err.max(), step.max())
+
+
+def test_bf16_roundtrip_is_cast():
+    x = jax.random.normal(jax.random.key(0), (4, 4))
+    codec = compress.get_codec("bf16")
+    enc = compress.encode(codec, {"x": x}, jax.random.key(1))
+    assert jax.tree.leaves(enc["codes"])[0].dtype == jnp.bfloat16
+    dec = compress.decode(codec, enc, {"x": x})["x"]
+    np.testing.assert_array_equal(np.asarray(dec),
+                                  np.asarray(x.astype(jnp.bfloat16)
+                                             .astype(jnp.float32)))
+
+
+def test_zero_leaf_roundtrips_exactly():
+    """A zero tile has absmax 0: the clamped scale must decode to exact
+    zeros, not NaN/garbage."""
+    x = {"z": jnp.zeros((3, 5))}
+    for name in ("int8", "int4"):
+        codec = compress.get_codec(name)
+        enc = compress.encode(codec, x, jax.random.key(0))
+        dec = compress.decode(codec, enc, x)
+        np.testing.assert_array_equal(np.asarray(dec["z"]), 0.0)
+
+
+@pytest.mark.parametrize("codec_name", ["int8", "int4"])
+def test_stochastic_rounding_unbiased(codec_name):
+    """E over keys of dequant(quant(x)) == x: the rounding draw floor(q+u)
+    is unbiased, so averaging many independent encodes recovers the input
+    to statistical tolerance."""
+    codec = compress.get_codec(codec_name)
+    x = {"x": jax.random.normal(jax.random.key(3), (64,))}
+    n_keys = 400
+    acc = np.zeros(64)
+    for k in range(n_keys):
+        enc = compress.encode(codec, x, jax.random.key(k))
+        acc += np.asarray(compress.decode(codec, enc, x)["x"])
+    mean = acc / n_keys
+    scales = np.asarray(jax.tree.leaves(
+        compress.encode(codec, x, jax.random.key(0))["scales"])[0],
+        np.float32)
+    step = float(scales.max())
+    # SE of the mean of a ±step/2-ish rounding error over n_keys draws
+    tol = 4 * step / np.sqrt(n_keys) + 1e-6
+    np.testing.assert_allclose(mean, np.asarray(x["x"]), atol=5 * tol)
+
+
+def test_error_feedback_telescopes():
+    """Σ_t dequant_t == Σ_t payload_t − e_T exactly (up to f32 association):
+    the EF recursion v_t = p_t + e_{t-1}, e_t = v_t − dequant_t telescopes,
+    so installed updates sum to the true updates."""
+    codec = compress.get_codec("int8")
+    base = {"c": jax.random.normal(jax.random.key(5), (2, 4, 4))}
+    ef = compress.init_ef(base)
+    tot_dec = jax.tree.map(jnp.zeros_like, base)
+    tot_true = jax.tree.map(jnp.zeros_like, base)
+    for t in range(25):
+        p = jax.tree.map(lambda l: l * (1.0 + 0.07 * t), base)
+        _, dec, ef = compress.encode_client(codec, p, ef,
+                                            jax.random.key(100 + t))
+        tot_dec = jax.tree.map(lambda a, b: a + b, tot_dec, dec)
+        tot_true = jax.tree.map(lambda a, b: a + b, tot_true, p)
+    jax.tree.map(
+        lambda d, tr, e: np.testing.assert_allclose(
+            np.asarray(d), np.asarray(tr - e), atol=5e-5),
+        tot_dec, tot_true, ef)
+    # and the residual itself stays bounded by one quantization step
+    amax = float(jnp.max(jnp.abs(tot_true["c"]))) / 25
+    assert float(jnp.max(jnp.abs(ef["c"]))) < 2 * amax
+
+
+def test_encoded_bytes_formula():
+    """Wire bytes are exactly codes + scales: for an n-element leaf with
+    tile t, int8 costs n_pad bytes of codes + 2·n_tiles of bf16 scales and
+    int4 half the code bytes — priced by comm.tree_bytes on the encoded
+    pytree, never on the dequantized tensors."""
+    x = {"c": jnp.zeros((2, 4, 4))}          # 32 elements → one 32-wide tile
+    enc8 = compress.encode(compress.get_codec("int8"), x, jax.random.key(0))
+    enc4 = compress.encode(compress.get_codec("int4"), x, jax.random.key(0))
+    assert comm.tree_bytes(enc8) == 32 + 2
+    assert comm.tree_bytes(enc4) == 16 + 2
+    assert comm.tree_bytes(
+        compress.encode(compress.get_codec("bf16"), x, jax.random.key(0))) \
+        == 64
+
+
+def test_stacked_matches_per_client():
+    """encode_stacked is bitwise the per-client encode_client under the same
+    key stream — the loop⇄vmap parity contract at the codec level."""
+    codec = compress.get_codec("int4")
+    m = 3
+    payload = {"c": jax.random.normal(jax.random.key(9), (m, 2, 4, 4))}
+    ef = compress.init_ef(payload)
+    keys = compress.client_keys(17, 4, m)
+    enc_s, dec_s, ef_s = compress.encode_stacked(codec, payload, ef, keys)
+    for i in range(m):
+        pi = jax.tree.map(lambda l: l[i], payload)
+        ei = jax.tree.map(lambda l: l[i], ef)
+        enc_i, dec_i, ef_i = compress.encode_client(
+            codec, pi, ei, compress.client_key(17, 4, i))
+        jax.tree.map(
+            lambda s, c, i=i: np.testing.assert_array_equal(
+                np.asarray(s)[i], np.asarray(c)),
+            (enc_s, dec_s, ef_s), (enc_i, dec_i, ef_i))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: properties over arbitrary leaves
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_property_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    @settings(max_examples=25, deadline=None)
+    @given(arr=hnp.arrays(np.float32, hnp.array_shapes(max_dims=3,
+                                                       max_side=9),
+                          elements=st.floats(-100, 100, width=32)),
+           codec_name=st.sampled_from(["int8", "int4"]),
+           key=st.integers(0, 2**20))
+    def check(arr, codec_name, key):
+        codec = compress.get_codec(codec_name)
+        x = {"x": jnp.asarray(arr)}
+        enc = compress.encode(codec, x, jax.random.key(key))
+        dec = np.asarray(compress.decode(codec, enc, x)["x"])
+        scales = np.asarray(jax.tree.leaves(enc["scales"])[0], np.float32)
+        tile = compress._leaf_tile(arr.size, codec.pack)
+        step = np.repeat(scales, tile)[:arr.size].reshape(arr.shape)
+        assert np.all(np.abs(dec - arr) <= 1.3 * step + 1e-6)
+        # re-encoding with the same key is deterministic
+        enc2 = compress.encode(codec, x, jax.random.key(key))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), enc, enc2)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the federated runtime under compression
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+def _run(fed_setup, rounds=2, method="celora", **kw):
+    task, ctrain, ctest, m = fed_setup
+    kw.setdefault("chunk_rounds", 2)
+    fed = FedConfig(method=method, n_clients=m, rounds=rounds, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, seed=3, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+def _assert_close(ref, out):
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.participants == r_out.participants
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+        assert r_ref.downlink_bytes == r_out.downlink_bytes
+        assert r_ref.uplink_elems == r_out.uplink_elems
+        assert abs(r_ref.train_loss - r_out.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-3)
+
+
+def test_codec_none_is_bit_identical_legacy(fed_setup):
+    """uplink_codec='none' (the default) takes the legacy code path: no EF
+    state in the client, raw-payload bytes, bit-for-bit the default-config
+    history."""
+    ref = _run(fed_setup)
+    out = _run(fed_setup, uplink_codec="none")
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.train_loss == r_out.train_loss
+        assert r_ref.accs == r_out.accs
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+    assert "ef" not in out["states"][0]
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_ref, s_out)
+
+
+@pytest.mark.parametrize("participation", [1.0, 0.4])
+@pytest.mark.parametrize("codec", ["bf16", "int8", "int4"])
+def test_scan_matches_eager_compressed(fed_setup, codec, participation):
+    """The eager⇄scan equivalence contract holds for every codec at full
+    and partial participation (same bytes, same history)."""
+    kw = dict(uplink_codec=codec, participation=participation)
+    ref = _run(fed_setup, **kw)
+    out = _run(fed_setup, engine="scan", **kw)
+    _assert_close(ref, out)
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-4), s_ref, s_out)
+
+
+def test_loop_matches_vmap_compressed(fed_setup):
+    """Per-client and batched encodes draw the same stochastic-rounding
+    bits (the fold_in key stream), so loop⇄vmap stay equivalent under
+    compression, with identical byte accounting."""
+    ref = _run(fed_setup, uplink_codec="int8", participation=0.5,
+               client_parallelism="loop")
+    out = _run(fed_setup, uplink_codec="int8", participation=0.5,
+               client_parallelism="vmap")
+    _assert_close(ref, out)
+
+
+def test_compressed_fedavg_strategy(fed_setup):
+    """Compression is strategy-agnostic: a FedAvg baseline payload (A+B)
+    quantizes, aggregates dequantized, and stays eager⇄scan equivalent."""
+    kw = dict(uplink_codec="int8", method="fedpetuning",
+              straggler_frac=0.3)
+    ref = _run(fed_setup, **kw)
+    out = _run(fed_setup, engine="scan", **kw)
+    _assert_close(ref, out)
+
+
+def test_compressed_bytes_are_encoded_pytree(fed_setup):
+    """Recorded uplink bytes equal participants × the encoded per-client
+    pytree (codes + scales) — strictly cheaper than the raw payload, int4
+    cheaper than int8 — while the DOWNLINK stays the raw payload bytes:
+    the server dequantizes before aggregating and broadcasts full-precision
+    aggregates, so only the identity codec mirrors up and down."""
+    task, _, _, m = fed_setup
+    from repro.core.baselines import get_strategy
+    strategy = get_strategy("celora")
+    state = strategy.init_state(task.init_client(jax.random.key(0)))
+    payload = strategy.uplink(state)
+    raw = comm.tree_bytes(payload)
+    outs = {}
+    for codec_name in ("none", "bf16", "int8", "int4"):
+        per = (raw if codec_name == "none" else comm.tree_bytes(
+            compress.encode(compress.get_codec(codec_name), payload,
+                            jax.random.key(0))))
+        out = _run(fed_setup, uplink_codec=codec_name, participation=0.5)
+        outs[codec_name] = out
+        for rec in out["history"]:
+            assert rec.uplink_bytes == len(rec.participants) * per
+            assert rec.downlink_bytes == len(rec.participants) * raw
+    b = {k: o["uplink_bytes_per_round"] for k, o in outs.items()}
+    assert b["int4"] < b["int8"] < b["bf16"] < b["none"]
+    assert b["int8"] <= 0.30 * b["none"]
+
+
+def test_ef_state_survives_resume_exactly(fed_setup, tmp_path):
+    """Kill-then-resume with int8+EF reproduces the uninterrupted history
+    and final states EXACTLY — the EF residual is part of the checkpointed
+    carry."""
+    path = str(tmp_path / "fed.npz")
+    kw = dict(uplink_codec="int8", participation=0.5)
+    full = _run(fed_setup, engine="scan", rounds=6, **kw)
+    _run(fed_setup, engine="scan", rounds=4, checkpoint_path=path, **kw)
+    res = _run(fed_setup, engine="scan", rounds=6, checkpoint_path=path,
+               resume=True, **kw)
+    for r_full, r_res in zip(full["history"], res["history"]):
+        assert r_full.train_loss == r_res.train_loss
+        assert r_full.accs == r_res.accs
+        assert r_full.uplink_bytes == r_res.uplink_bytes
+    assert "ef" in full["states"][0]
+    for s_full, s_res in zip(full["states"], res["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_full, s_res)
+
+
+def test_resume_rejects_codec_change(fed_setup, tmp_path):
+    """The EF residual is meaningful only under the codec that produced it:
+    resuming a checkpoint under a different uplink_codec must be refused
+    via the config fingerprint."""
+    path = str(tmp_path / "fed.npz")
+    _run(fed_setup, engine="scan", uplink_codec="int8", participation=0.5,
+         checkpoint_path=path)
+    with pytest.raises(ValueError, match="different run configuration"):
+        _run(fed_setup, engine="scan", rounds=4, uplink_codec="int4",
+             participation=0.5, checkpoint_path=path, resume=True)
+    with pytest.raises(ValueError, match="different run configuration"):
+        _run(fed_setup, engine="scan", rounds=4, participation=0.5,
+             checkpoint_path=path, resume=True)
+
+
+def test_bad_codec_rejected(fed_setup):
+    with pytest.raises(ValueError, match="unknown uplink_codec"):
+        _run(fed_setup, uplink_codec="gzip")

@@ -76,6 +76,36 @@ def test_train_driver_scan_engine_matches_eager(tmp_path):
                   **{**kw, "method": "fedavg"})
 
 
+def test_train_driver_uplink_codec(tmp_path):
+    """LM driver with --uplink-codec int8: bytes are the encoded pytree
+    (strictly under the f32 payload), eager⇄scan histories match, the EF
+    carry survives kill-then-resume exactly, and a codec change on resume
+    is refused."""
+    kw = dict(arch="fed-100m", clients=2, rounds=4, local_steps=3, batch=4,
+              seq=64, method="celora", verbose=False, reduced=True,
+              uplink_codec="int8")
+    ref = train_run(engine="eager", **kw)
+    raw = train_run(engine="eager", **{**kw, "uplink_codec": "none",
+                                       "rounds": 1})
+    assert ref["history"][0]["uplink_bytes"] < \
+        0.30 * raw["history"][0]["uplink_bytes"]
+    out = train_run(engine="scan", chunk_rounds=2, **kw)
+    for h_ref, h_out in zip(ref["history"], out["history"]):
+        assert h_ref["uplink_bytes"] == h_out["uplink_bytes"]
+        assert abs(h_ref["loss"] - h_out["loss"]) < 1e-4
+
+    path = str(tmp_path / "lm8.npz")
+    train_run(engine="scan", chunk_rounds=2, ckpt=path,
+              **{**kw, "rounds": 2})                      # "killed" at 2
+    res = train_run(engine="scan", chunk_rounds=2, ckpt=path, resume=True,
+                    **kw)
+    for h_out, h_res in zip(out["history"], res["history"]):
+        assert h_out["loss"] == h_res["loss"]
+    with pytest.raises(ValueError, match="different run configuration"):
+        train_run(engine="scan", chunk_rounds=2, ckpt=path, resume=True,
+                  **{**kw, "uplink_codec": "none"})
+
+
 def test_make_model_draws_decorrelated():
     """Regression: make_model used to reuse keys across draws — at the
     default dims the frozen head (32×4) and the adapter's B perturbation

@@ -1,9 +1,13 @@
 #!/usr/bin/env python
 """Docs link check (CI): every repo path mentioned in README.md / DESIGN.md
-must exist, and every DESIGN.md section cited from source docstrings
-(``DESIGN.md §N``) must be present in DESIGN.md.
+must exist, every DESIGN.md section cited from source docstrings
+(``DESIGN.md §N``) must be present in DESIGN.md, and the generated API
+reference (docs/API.md, tools/gen_api_docs.py) must not be stale.
 
-Exit code 0 = all references resolve.
+Exit code 0 = all references resolve and docs/API.md is current.  The API
+staleness check needs the package importable (jax installed); when it is
+not, that check is skipped with a warning so the pure link lint still runs
+anywhere.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "DESIGN.md"]
 # repo-relative paths as they appear in docs (code spans, commands, prose)
 PATH_RE = re.compile(
-    r"\b((?:src|examples|benchmarks|tests|tools|\.github)/"
+    r"\b((?:src|examples|benchmarks|tests|tools|docs|\.github)/"
     r"[\w./\-]+\.(?:py|md|toml|yml|yaml))\b")
 SECTION_CITE_RE = re.compile(r"DESIGN\.md §(\d+)")
 SECTION_DEF_RE = re.compile(r"^##\s*§?(\d+)", re.MULTILINE)
@@ -44,13 +48,27 @@ def main() -> int:
                 bad.append(f"{src.relative_to(ROOT)}: cites DESIGN.md §{num} "
                            f"but DESIGN.md has no section §{num}")
 
+    # generated API reference must match a fresh regeneration
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import gen_api_docs
+        api = ROOT / "docs" / "API.md"
+        if not api.exists():
+            bad.append("docs/API.md: missing — run python tools/gen_api_docs.py")
+        elif api.read_text() != gen_api_docs.generate():
+            bad.append("docs/API.md: stale — run python tools/gen_api_docs.py "
+                       "and commit the result")
+    except ImportError as e:                      # no jax in this env
+        print(f"warning: skipping docs/API.md staleness check ({e})")
+
     if bad:
         print("docs check FAILED:")
         for b in bad:
             print(f"  - {b}")
         return 1
     print(f"docs check OK ({', '.join(DOCS)}; "
-          f"{len(defined)} DESIGN.md sections)")
+          f"{len(defined)} DESIGN.md sections; docs/API.md)")
     return 0
 
 
