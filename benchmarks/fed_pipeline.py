@@ -1,0 +1,208 @@
+"""Rounds/sec: the device-resident scan pipeline (DESIGN.md §11) vs the
+PR-3 scan engine, with per-stage attribution.
+
+The PR-3 scan engine removed per-round dispatch, but its chunk loop still
+serializes three taxes: a host-side ``stack_chunk_batches`` stall between
+chunks, a full copy of the stacked m-client carry per ``run_chunk`` call
+(no buffer donation), and m full evals every round.  This benchmark
+measures each §11 stage cumulatively on the dispatch-bound scenario of
+``benchmarks/fed_scan.py`` (m = 10 clients, 50 cheap rounds, partial
+participation with stragglers):
+
+    scan        donate=off prefetch=off eval_every=1   (the PR-3 baseline)
+    +donate     carry donated + old handles deleted
+    +prefetch   chunk c+1 drawn/stacked/transferred while c computes
+    +eval_every m-client eval only every 5th round (history semantics
+                documented in DESIGN.md §11 — losses identical, accs carried)
+
+and reports the fused tri-LoRA backward kernel's attribution separately
+(``tri_lora_dx/dw_kernel`` vs the five-GEMM XLA chain): on this CPU
+container the kernel runs in interpret mode, so its row reports
+correctness (max grad error vs the chain) and the chain's XLA timing, not
+a kernel speedup — the compiled path is TPU-only.
+
+Per stage the JSON also carries the ``wall_s`` split introduced by §11
+(``host_s`` = residual host staging stall, ``device_s`` = device compute +
+history sync) — the attribution that shows WHERE the prefetch win lands.
+
+The full (non ``--quick``) run asserts pipeline/baseline rounds-per-sec
+>= 1.5x and that every stage's loss history is allclose to the baseline's
+(donation/prefetch/eval cadence are execution details).
+
+Usage:  PYTHONPATH=src python benchmarks/fed_pipeline.py \
+            [--quick] [--smoke] [--json F]
+
+``--smoke`` is the CI job: 2 clients, 4 rounds, chunk 2, prefetch +
+donation ON, asserting the pipelined engine's history (loss AND accs) is
+allclose to the plain scan engine's, JSON artifact written.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from fed_scan import bench_setup  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+
+STAGES = [
+    ("scan", dict(scan_donate=False, scan_prefetch=False, eval_every=1)),
+    ("+donate", dict(scan_donate=True, scan_prefetch=False, eval_every=1)),
+    ("+prefetch", dict(scan_donate=True, scan_prefetch=True, eval_every=1)),
+    ("+eval_every", dict(scan_donate=True, scan_prefetch=True,
+                         eval_every=5)),
+]
+SPEEDUP_FLOOR = 1.5
+
+
+def run_stage(task, ctrain, ctest, *, m: int, rounds: int, chunk: int,
+              **knobs) -> dict:
+    fed = FedConfig(method="celora", n_clients=m, rounds=rounds,
+                    local_steps=1, batch_size=2, lr=1e-2, seed=0,
+                    participation=0.5, straggler_frac=0.2,
+                    use_data_sim=False, cka_probes=8,   # S^model only
+                    engine="scan", chunk_rounds=chunk, **knobs)
+    out = run_federated(task, fed, ctrain, ctest)
+    hist = out["history"]
+    wall = sum(r.wall_s for r in hist)
+    return {"rounds": rounds, "rounds_per_sec": rounds / wall,
+            "wall_s": wall,
+            "host_s_per_round": float(np.mean([r.host_s for r in hist])),
+            "device_s_per_round": float(np.mean([r.device_s for r in hist])),
+            "mean_acc": out["mean_acc"],
+            "loss_history": [r.train_loss for r in hist]}
+
+
+def fused_bwd_attribution() -> dict:
+    """Kernel-level attribution for the fused backward: grad error of the
+    Pallas dx/dW kernels (interpret mode on CPU) vs the five-GEMM XLA
+    chain, plus the chain's compiled XLA time (the number the roofline
+    sees — timed through the jitted oracle so no Python retracing lands in
+    the measurement)."""
+    from repro.kernels.tri_lora import tri_lora_matmul, tri_lora_matmul_ref
+    rng = np.random.default_rng(0)
+    mm, kk, nn, r = 128, 256, 256, 8
+    ops = [jnp.asarray(rng.standard_normal((mm, kk)), jnp.float32),
+           jnp.asarray(rng.standard_normal((kk, nn)) * 0.05, jnp.float32),
+           jnp.asarray(rng.standard_normal((kk, r)) * 0.2, jnp.float32),
+           jnp.asarray(rng.standard_normal((r, r)) * 0.2, jnp.float32),
+           jnp.asarray(rng.standard_normal((r, nn)) * 0.2, jnp.float32)]
+
+    def grads(fused):
+        return jax.grad(lambda *o: jnp.sum(tri_lora_matmul(
+            *o, 2.0, bm=64, bn=64, bk=64, interpret=True,
+            fused_bwd=fused)), argnums=tuple(range(5)))(*ops)
+
+    chain_jit = jax.jit(jax.grad(
+        lambda *o: jnp.sum(tri_lora_matmul_ref(*o, 2.0)),
+        argnums=tuple(range(5))))
+    jax.block_until_ready(chain_jit(*ops))          # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(chain_jit(*ops))
+    chain_s = time.perf_counter() - t0
+    g_chain = grads(False)
+    g_fused = grads(True)
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+              for a, b in zip(g_fused, g_chain))
+    return {"shape": [mm, kk, nn, r], "max_grad_err_vs_chain": err,
+            "chain_xla_s": chain_s,
+            "note": ("interpret mode on CPU: correctness attribution only; "
+                     "the compiled fused kernels are the TPU path")}
+
+
+def smoke(json_path: str | None) -> dict:
+    """CI smoke: 2 clients, 4 rounds, chunk 2, donation + prefetch ON —
+    the pipelined engine's history must be allclose to the plain scan's."""
+    m, rounds, chunk = 2, 4, 2
+    task, ctrain, ctest = bench_setup(m)
+    plain = run_stage(task, ctrain, ctest, m=m, rounds=rounds, chunk=chunk,
+                      scan_donate=False, scan_prefetch=False)
+    piped = run_stage(task, ctrain, ctest, m=m, rounds=rounds, chunk=chunk,
+                      scan_donate=True, scan_prefetch=True)
+    np.testing.assert_allclose(piped["loss_history"], plain["loss_history"],
+                               atol=1e-6)
+    np.testing.assert_allclose(piped["mean_acc"], plain["mean_acc"],
+                               atol=1e-6)
+    print("# fed_pipeline --smoke: pipelined history allclose to plain scan "
+          f"({rounds} rounds, m={m}, chunk={chunk}, donate+prefetch on)")
+    report = {"mode": "smoke", "m": m, "rounds": rounds,
+              "chunk_rounds": chunk, "plain": plain, "pipelined": piped}
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {json_path}")
+    return report
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="F")
+    a = ap.parse_args(argv)
+    if a.smoke:
+        return smoke(a.json)
+
+    m = 6 if a.quick else 10
+    rounds = 10 if a.quick else 50
+    chunk = 5 if a.quick else 10
+    task, ctrain, ctest = bench_setup(m)
+
+    print(f"# fed_pipeline — §11 pipeline stages vs PR-3 scan, m={m}, "
+          f"rounds={rounds}, chunk={chunk}, participation=0.5, "
+          f"straggler_frac=0.2")
+    results = {}
+    for name, knobs in STAGES:
+        # warm the compilation caches (one chunk's worth of rounds)
+        run_stage(task, ctrain, ctest, m=m, rounds=chunk, chunk=chunk,
+                  **knobs)
+        results[name] = run_stage(task, ctrain, ctest, m=m, rounds=rounds,
+                                  chunk=chunk, **knobs)
+
+    base = results["scan"]
+    print("stage,rounds_per_sec,host_s_per_round,device_s_per_round,"
+          "speedup_vs_scan")
+    for name, r in results.items():
+        r["speedup_vs_scan"] = r["rounds_per_sec"] / base["rounds_per_sec"]
+        print(f"{name},{r['rounds_per_sec']:.2f},"
+              f"{r['host_s_per_round'] * 1e3:.2f}ms,"
+              f"{r['device_s_per_round'] * 1e3:.2f}ms,"
+              f"{r['speedup_vs_scan']:.2f}x")
+        # execution details must not move the training trajectory
+        np.testing.assert_allclose(r["loss_history"], base["loss_history"],
+                                   atol=1e-6)
+
+    fused = fused_bwd_attribution()
+    print(f"# fused_bwd: max grad err vs chain {fused['max_grad_err_vs_chain']:.1e} "
+          f"(chain XLA {fused['chain_xla_s'] * 1e3:.1f}ms; {fused['note']})")
+
+    speedup = results["+eval_every"]["speedup_vs_scan"]
+    print(f"# pipeline/baseline speedup: {speedup:.2f}x")
+    report = {"m": m, "rounds": rounds, "chunk_rounds": chunk,
+              "speedup": speedup, "stages": results, "fused_bwd": fused}
+    if a.json:
+        # loss histories are an internal cross-check, not artifact payload
+        slim = {k: {kk: vv for kk, vv in v.items() if kk != "loss_history"}
+                for k, v in results.items()}
+        Path(a.json).write_text(json.dumps(
+            dict(report, stages=slim), indent=2))
+        print(f"# wrote {a.json}")
+    if not a.quick:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"device-resident pipeline speedup {speedup:.2f}x < "
+            f"{SPEEDUP_FLOOR}x over the PR-3 scan engine — the §11 "
+            f"pipeline regressed")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,23 @@ def main(quick: bool = False):
     err = float(jnp.max(jnp.abs(out - tri_lora_matmul_ref(x, w, a, c, b, 2.0))))
     rows.append(("tri_lora_ref_xla", ref_t, f"kernel_interp_max_err={err:.1e}"))
 
+    # --- tri-LoRA backward: five-GEMM XLA chain (timed) vs the fused
+    # Pallas dx/dW kernels (interpret-mode max grad err vs jax.grad of the
+    # oracle — the compiled kernels are the TPU path, DESIGN.md §11)
+    ct = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    chain_fn = jax.jit(jax.grad(
+        lambda *o: jnp.sum(tri_lora_matmul_ref(*o, 2.0).astype(jnp.float32)
+                           * ct), argnums=(0, 1, 2, 3, 4)))
+    chain_t = _timeit(chain_fn, x, w, a, c, b, n=5)
+    g_fused = jax.grad(lambda *t: jnp.sum(tri_lora_matmul(
+        *t, 2.0, bm=64, bn=64, bk=64, interpret=True,
+        fused_bwd=True).astype(jnp.float32) * ct),
+        argnums=(0, 1, 2, 3, 4))(x, w, a, c, b)
+    bwd_err = max(float(jnp.max(jnp.abs(gi - gj)))
+                  for gi, gj in zip(g_fused, chain_fn(x, w, a, c, b)))
+    rows.append(("tri_lora_bwd_ref_xla", chain_t,
+                 f"fused_bwd_interp_max_err={bwd_err:.1e}"))
+
     # --- attention: blockwise XLA-flash vs materialized SDPA
     from repro.models.attention import blockwise_sdpa, sdpa
     from repro.kernels.flash_attention import flash_attention

@@ -41,6 +41,7 @@ def _register():
     import fed_comm
     import fed_compress
     import fed_partial
+    import fed_pipeline
     import fed_scale
     import fed_scan
     import fig5_privacy
@@ -69,6 +70,8 @@ def _register():
         "fed_partial": fed_partial.main,          # partial participation (ours)
         "fed_scale": fed_scale.main,              # client-dispatch scaling (ours)
         "fed_scan": fed_scan.main,                # eager vs scan engine (ours)
+        "fed_pipeline":                           # §11 pipeline stages (ours)
+            lambda quick: fed_pipeline.main(["--quick"] if quick else []),
         "fed_compress":                           # uplink codec sweep (ours)
             lambda quick: fed_compress.main(["--quick"] if quick else []),
         "roofline": _roofline,                    # §Roofline (ours)

@@ -19,7 +19,10 @@ mesh in the ``"shard"`` path.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+import queue
+import threading
+import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -102,3 +105,130 @@ def stack_chunk_batches(loaders: Sequence, n_rounds: int, n_batches: int
         tk.append(np.stack(rt))
         lb.append(np.stack(rl))
     return jnp.asarray(np.stack(tk)), jnp.asarray(np.stack(lb))
+
+
+class ChunkPrefetcher:
+    """Double-buffered chunk producer for the scan engine (DESIGN.md §11).
+
+    ``run_chunk(c)`` blocks the Python thread in XLA (GIL released), so a
+    background thread can draw, stack, and start the host→device transfer
+    of chunk c+1's ``(chunk, m, steps, B, T)`` batches while chunk c
+    computes — turning the engine's compute→stall→compute serialization
+    into an overlap.  The producer is the ONLY consumer of the loaders'
+    RNG streams once started, and it draws chunks in schedule order, so
+    the stream of batches is bit-for-bit what the serial
+    ``stack_chunk_batches`` loop would have produced (asserted in
+    tests/test_pipeline.py).
+
+    ``produce(n_rounds)`` is the per-chunk stacking closure (the scan
+    engine passes ``stack_chunk_batches``; the LM driver its own drawer);
+    ``schedule`` is the list of chunk sizes in consumption order.  The
+    queue is bounded (``depth``, default 2 = double buffering), so the
+    producer stays at most ``depth`` chunks ahead — bounding host memory
+    at ``depth`` stacked chunks.  Each ``get()`` returns
+    ``(payload, produce_seconds)``; producer exceptions are re-raised in
+    the consumer.  Call ``close()`` on early exit so the daemon thread
+    stops drawing."""
+
+    _DONE = object()
+
+    def __init__(self, produce: Callable[[int], Any],
+                 schedule: Sequence[int], depth: int = 2):
+        assert depth >= 1, depth
+        self._produce = produce
+        self._schedule = list(schedule)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="chunk-prefetcher")
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for n_rounds in self._schedule:
+                if self._stop.is_set():
+                    return
+                t0 = time.perf_counter()
+                item = self._produce(n_rounds)
+                self._put((item, time.perf_counter() - t0))
+            self._put(self._DONE)
+        except BaseException as e:  # re-raised in the consumer's get()
+            self._put(e)
+
+    def _put(self, item) -> None:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def get(self):
+        """Next chunk's ``(payload, produce_seconds)``, in schedule order.
+        Blocks until the producer has it ready; the time spent blocked here
+        is the engine's residual (un-overlapped) host stall."""
+        item = self._q.get()
+        if item is self._DONE:
+            raise StopIteration("prefetch schedule exhausted")
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+    def close(self) -> None:
+        """Stop the producer; safe to call multiple times."""
+        self._stop.set()
+        # drain so a blocked producer observes the stop event
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+
+def drive_chunks(carry: Any, schedule: Sequence[tuple[int, int]],
+                 produce: Callable[[int], Any],
+                 dispatch: Callable, on_chunk: Callable, *,
+                 donate: bool = True, prefetch: bool = True) -> Any:
+    """The shared chunk-pipeline driver of both scan engines (DESIGN.md
+    §11): for each ``(c0, c1)`` in ``schedule``, fetch that chunk's batches
+    (from a :class:`ChunkPrefetcher` when ``prefetch``, else by calling
+    ``produce(c1 - c0)`` inline), run ``dispatch(carry, batches, c0, c1) →
+    (new_carry, host_outputs)`` (dispatch must host-sync its outputs so the
+    device time is attributed here), and — when ``donate`` — delete the old
+    carry's buffer handles, enforcing the donation contract: a re-read of a
+    donated buffer raises instead of returning stale memory.
+
+    ``on_chunk(carry, c0, c1, out, host_s, device_s, wall_s)`` receives the
+    NEW carry plus the per-ROUND wall split: ``host_s`` is the time blocked
+    staging batches (the residual queue wait under prefetch), ``device_s``
+    the dispatch + sync span.  The prefetcher is closed on any exit.
+    Returns the final carry."""
+    prefetcher = None
+    if prefetch and schedule:
+        prefetcher = ChunkPrefetcher(produce,
+                                     [c1 - c0 for c0, c1 in schedule])
+    try:
+        for c0, c1 in schedule:
+            t0 = time.perf_counter()
+            if prefetcher is not None:
+                batches, _produce_s = prefetcher.get()
+            else:
+                batches = produce(c1 - c0)
+            t_fetch = time.perf_counter()
+            prev_carry = carry
+            carry, out = dispatch(carry, batches, c0, c1)
+            if donate:
+                # the old carry was donated: delete the handles so any
+                # accidental re-read raises instead of reading stale memory
+                # (on backends that honor donation the buffers are already
+                # gone and delete() is a no-op)
+                jax.tree.map(lambda l: l.delete(), prev_carry)
+            t_done = time.perf_counter()
+            n_r = c1 - c0
+            on_chunk(carry, c0, c1, out, (t_fetch - t0) / n_r,
+                     (t_done - t_fetch) / n_r, (t_done - t0) / n_r)
+    finally:
+        if prefetcher is not None:
+            prefetcher.close()
+    return carry

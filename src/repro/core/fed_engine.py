@@ -54,14 +54,32 @@ Checkpoint/resume: at every chunk boundary the full federated state
 (stacked client states, S^model carry, per-round history) is written
 atomically via :mod:`repro.checkpoint.ckpt` with the run fingerprint in
 the metadata.  ``FedConfig.resume=True`` restores it, fast-forwards the
-per-client data streams over the completed rounds (the loaders are
-deterministic in the seed and the number of draws), and continues —
-reproducing the uninterrupted history exactly.
+per-client data streams over the completed rounds without materializing
+a single batch (:meth:`repro.data.pipeline.Loader.skip` — the loaders
+are deterministic in the seed and the number of draws, and skipping
+consumes the identical RNG stream while doing no gathers or copies), and
+continues — reproducing the uninterrupted history exactly.
+
+Device-resident pipeline (DESIGN.md §11): ``FedConfig.scan_donate``
+donates the scan carry (stacked client states + EF residual + S^model +
+last accuracies) to the jitted chunk program, so the dominant memory
+object is updated in place instead of copied every chunk — the engine
+explicitly deletes the old carry buffers after each dispatch, so any
+accidental re-read raises instead of silently reading stale memory.
+``FedConfig.scan_prefetch`` draws and stacks chunk c+1's batches on a
+background thread while chunk c computes
+(:class:`repro.core.client_batch.ChunkPrefetcher`); the residual host
+stall and the device time are reported separately as
+``RoundRecord.host_s`` / ``device_s``.  ``FedConfig.eval_every`` skips
+the m-client eval on off-cadence rounds (``lax.cond``), carrying the last
+evaluated accuracies through the scan — with the default ``eval_every=1``
+the round program is bit-for-bit the always-eval one.  None of the three
+knobs changes the history contract above (asserted in
+tests/test_pipeline.py).
 """
 from __future__ import annotations
 
 import os
-import time
 import warnings
 from typing import Callable, Optional, Sequence
 
@@ -86,7 +104,7 @@ _FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
                        "batch_size", "lr", "seed", "participation",
                        "sampler", "straggler_frac", "use_data_sim",
                        "use_model_sim", "cka_probes", "self_weight",
-                       "pfedme_eta", "uplink_codec")
+                       "pfedme_eta", "uplink_codec", "eval_every")
 
 
 def _fingerprint(fed) -> dict:
@@ -97,8 +115,13 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
                     use_data: bool, use_model: bool):
     """One jitted program: scan `round_step` over a chunk's prefetched
     batches and plan rows.  Everything run-specific but round-invariant
-    (test stacks, S^data, CKA probes, sample counts) arrives via ``consts``
-    so the compiled program is reusable across runs that share the task."""
+    (test stacks, S^data, CKA probes, sample counts, the last round index)
+    arrives via ``consts`` so the compiled program is reusable across runs
+    that share the task.  With ``fed.scan_donate`` the carry argument is
+    DONATED: the stacked client state (the dominant memory object), the EF
+    residual riding in it, S^model, and the carried accuracies are updated
+    in place instead of copied per chunk — callers must treat the passed-in
+    carry as consumed (run_scan deletes it explicitly)."""
     vfit = jax.vmap(local_fit)
     veval = jax.vmap(eval_one)
     eta = fed.pfedme_eta
@@ -107,9 +130,10 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
     compressed = not codec.is_identity and strategy.aggregate != "none"
     seed = fed.seed
     m = fed.n_clients
+    eval_every = max(1, int(fed.eval_every))
 
     def round_step(carry, xs, consts):
-        stacked, s_model = carry
+        stacked, s_model, prev_accs = carry
         toks, labs, smask, pmask, sampled_ids, rnd = xs
         tr = strategy.trainable(stacked)
         w_ref = stacked.get("w", {})
@@ -158,17 +182,30 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
             stacked = client_batch.select_clients(
                 pmask, strategy.install(stacked, down), stacked)
 
-        accs = veval(strategy.trainable(stacked),
-                     consts["test_toks"], consts["test_labs"])
+        if eval_every == 1:
+            # bit-for-bit the always-eval program (the eval_every=1 contract)
+            accs = veval(strategy.trainable(stacked),
+                         consts["test_toks"], consts["test_labs"])
+        else:
+            # off-cadence rounds skip the m-client eval entirely (lax.cond
+            # executes one branch) and carry the last evaluated accuracies
+            do = jnp.logical_or(rnd % eval_every == 0,
+                                rnd == consts["last_rnd"])
+            accs = jax.lax.cond(
+                do,
+                lambda s: veval(strategy.trainable(s),
+                                consts["test_toks"], consts["test_labs"]),
+                lambda s: prev_accs, stacked)
         sm = smask.astype(losses.dtype)
         loss = jnp.sum(losses * sm) / jnp.maximum(jnp.sum(sm), 1.0)
-        return (stacked, s_model), (loss, accs)
+        return (stacked, s_model, accs), (loss, accs)
 
-    @jax.jit
-    def run_chunk(carry, xs, consts):
+    def _scan(carry, xs, consts):
         return jax.lax.scan(lambda c, x: round_step(c, x, consts), carry, xs)
 
-    return run_chunk
+    if fed.scan_donate:
+        return jax.jit(_scan, donate_argnums=(0,))
+    return jax.jit(_scan)
 
 
 def _save_state(fed, stacked, s_model, losses, accs, walls,
@@ -193,6 +230,7 @@ def _load_state(fed, stacked, s_model, m: int):
                          f"checkpoint (no rounds_done in metadata)")
     want = _fingerprint(fed)
     meta.setdefault("uplink_codec", "none")       # pre-codec checkpoints
+    meta.setdefault("eval_every", 1)              # pre-§11 checkpoints
     stale = {k: (meta.get(k), v) for k, v in want.items()
              if k != "rounds" and meta.get(k) != v}
     if stale:
@@ -272,7 +310,8 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
     consts = {"counts": jnp.asarray(np.asarray(sample_counts, np.int64)),
               "test_toks": test_toks, "test_labs": test_labs,
               "s_data": jnp.asarray(s_data) if use_data else None,
-              "probes": probes}
+              "probes": probes,
+              "last_rnd": jnp.asarray(fed.rounds - 1, jnp.int32)}
 
     run_chunk = _SCAN_CACHE.get_or_build(
         (task.base, task.cfg),
@@ -281,7 +320,9 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
          # the traced program depends on the seed only through the codec's
          # in-graph key stream; keying on it for codec="none" would force a
          # pointless recompile per seed in variance sweeps
-         fed.uplink_codec, fed.seed if compressed else None),
+         fed.uplink_codec, fed.seed if compressed else None,
+         # pipeline knobs that change the traced/compiled program
+         bool(fed.scan_donate), max(1, int(fed.eval_every))),
         lambda: _build_chunk_fn(strategy, fed, local_fit, eval_one,
                                 use_data, use_model))
 
@@ -289,6 +330,8 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
     hist_loss: list = []
     hist_accs: list = []
     hist_wall: list = []
+    hist_host: list = []
+    hist_dev: list = []
     start = 0
     if fed.checkpoint_path and fed.resume and \
             not os.path.exists(fed.checkpoint_path):
@@ -303,34 +346,42 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         hist_loss = [float(v) for v in l0]
         hist_accs = [list(map(float, row)) for row in a0]
         hist_wall = [float(v) for v in w0]
+        hist_host = [0.0] * start
+        hist_dev = [0.0] * start
         # fast-forward the deterministic per-client data streams so round
         # `start` draws exactly what the uninterrupted run would have drawn
+        # — RNG-only per skipped draw session (no batch is materialized)
         for _ in range(start):
             for ld in loaders:
-                for _b in ld.batches(fed.local_steps):
-                    pass
+                ld.skip(fed.local_steps)
         if verbose:
             print(f"[{strategy.name}] resumed {start} rounds "
                   f"from {fed.checkpoint_path}")
 
-    carry = (stacked, s_model)
-    for c0 in range(start, fed.rounds, chunk):
-        c1 = min(c0 + chunk, fed.rounds)
-        t0 = time.time()
-        toks, labs = client_batch.stack_chunk_batches(loaders, c1 - c0,
-                                                      fed.local_steps)
+    # accuracies ride the carry so off-cadence rounds (eval_every > 1) can
+    # repeat the last evaluated row; on resume that is the last history row
+    accs0 = (jnp.asarray(np.asarray(hist_accs[-1], np.float32)) if start
+             else jnp.zeros((m,), jnp.float32))
+    carry = (stacked, s_model, accs0)
+
+    def dispatch(carry, batches, c0, c1):
+        toks, labs = batches
         xs = (toks, labs,
               jnp.asarray(pstack.sampled_mask[c0:c1]),
               jnp.asarray(pstack.participant_mask[c0:c1]),
               jnp.asarray(pstack.sampled_ids[c0:c1]),
               jnp.arange(c0, c1, dtype=jnp.int32))
         carry, (losses, accs) = run_chunk(carry, xs, consts)
-        losses = np.asarray(losses)         # the chunk's ONE host sync
-        accs = np.asarray(accs)
-        per_round = (time.time() - t0) / (c1 - c0)
-        hist_loss += [float(v) for v in losses]
-        hist_accs += [list(map(float, row)) for row in accs]
-        hist_wall += [per_round] * (c1 - c0)
+        # the chunk's ONE host sync
+        return carry, (np.asarray(losses), np.asarray(accs))
+
+    def on_chunk(carry, c0, c1, out, host_s, device_s, wall_s):
+        losses, accs = out
+        hist_loss.extend(float(v) for v in losses)
+        hist_accs.extend(list(map(float, row)) for row in accs)
+        hist_wall.extend([wall_s] * (c1 - c0))
+        hist_host.extend([host_s] * (c1 - c0))
+        hist_dev.extend([device_s] * (c1 - c0))
         if fed.checkpoint_path:
             _save_state(fed, carry[0], carry[1], hist_loss, hist_accs,
                         hist_wall, c1, strategy)
@@ -338,8 +389,18 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
             print(f"[{strategy.name}] rounds {c0:3d}–{c1 - 1:3d} "
                   f"loss {hist_loss[-1]:.4f} "
                   f"acc {float(np.mean(hist_accs[-1])):.3f} "
-                  f"({per_round:.2f}s/round)")
+                  f"({wall_s:.2f}s/round)")
 
+    carry = client_batch.drive_chunks(
+        carry,
+        [(c0, min(c0 + chunk, fed.rounds))
+         for c0 in range(start, fed.rounds, chunk)],
+        lambda n: client_batch.stack_chunk_batches(loaders, n,
+                                                   fed.local_steps),
+        dispatch, on_chunk,
+        donate=fed.scan_donate, prefetch=fed.scan_prefetch)
+
+    eval_every = max(1, int(fed.eval_every))
     history = [
         RoundRecord(
             rnd, hist_loss[rnd], hist_accs[rnd],
@@ -349,7 +410,9 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
             participants=plans[rnd].participants.tolist(),
             sampled=plans[rnd].sampled.tolist(),
             dropped=plans[rnd].dropped.tolist(),
-            uplink_elems=per_e * int(pstack.n_participants[rnd]))
+            uplink_elems=per_e * int(pstack.n_participants[rnd]),
+            host_s=hist_host[rnd], device_s=hist_dev[rnd],
+            evaluated=(rnd % eval_every == 0 or rnd == fed.rounds - 1))
         for rnd in range(fed.rounds)]
 
     states = client_batch.unstack_states(carry[0])

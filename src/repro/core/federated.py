@@ -122,6 +122,13 @@ class FedConfig:
     chunk_rounds: int = 8             # scan: rounds fused per dispatch
     checkpoint_path: Optional[str] = None  # scan: state file, chunk cadence
     resume: bool = False              # scan: restore checkpoint_path first
+    # --- device-resident scan pipeline (DESIGN.md §11) ---------------------
+    scan_donate: bool = True          # scan: donate the carry buffers
+    scan_prefetch: bool = True        # scan: overlapped chunk prefetch
+    eval_every: int = 1               # eval cadence: every k-th round + last;
+    #                                   off-cadence rounds report the LAST
+    #                                   evaluated accuracies (stale, marked by
+    #                                   RoundRecord.evaluated=False)
     # --- uplink compression (repro.core.compress, DESIGN.md §10) -----------
     uplink_codec: str = "none"        # "none" | "bf16" | "int8" | "int4"
     # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
@@ -153,6 +160,13 @@ class RoundRecord:
     sampled: list = dataclasses.field(default_factory=list)
     dropped: list = dataclasses.field(default_factory=list)       # stragglers
     uplink_elems: int = 0  # dtype-blind element count (legacy unit)
+    # wall_s split (DESIGN.md §11): host-side batch staging vs device
+    # compute+sync; both 0.0 where a path does not measure them, and
+    # host_s + device_s <= wall_s (the remainder is untimed Python)
+    host_s: float = 0.0    # time blocked staging batches on the host
+    device_s: float = 0.0  # time in device compute + the history sync
+    evaluated: bool = True  # False: accs carried from the last eval round
+    #                         (fed.eval_every > 1 off-cadence rounds)
 
     @property
     def uplink_floats(self) -> int:
@@ -265,6 +279,8 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     if fed.engine != "scan" and (fed.checkpoint_path or fed.resume):
         raise ValueError("checkpoint_path/resume require engine='scan' "
                          "(the eager engine does not checkpoint)")
+    if fed.eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1; got {fed.eval_every}")
     m = fed.n_clients
     sampling.n_sampled(m, fed.participation)      # validates participation
     if not 0.0 <= fed.straggler_frac < 1.0:
@@ -416,6 +432,7 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                                                 participants)
 
     history: list[RoundRecord] = []
+    accs = [0.0] * m        # replaced on round 0 (always an eval round)
 
     if mode == "loop":
         # ---- reference path: one dispatch per client per round
@@ -473,10 +490,13 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             for i in plan.participants:
                 states[i] = strategy.install(states[i], downs[i])
 
-            accs = [float(eval_fn(strategy.trainable(states[i]),
-                                  test_toks[i], test_labs[i]))
-                    for i in range(m)]
-            history.append(_round_record(rnd, losses, accs, rc, plan, t0))
+            evaluated = _do_eval(rnd, fed)
+            if evaluated:
+                accs = [float(eval_fn(strategy.trainable(states[i]),
+                              test_toks[i], test_labs[i]))
+                        for i in range(m)]
+            history.append(_round_record(rnd, losses, accs, rc, plan, t0,
+                                         evaluated=evaluated))
             if verbose:
                 _print_round(strategy, history[-1])
     else:
@@ -543,12 +563,14 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             else:
                 stacked = strategy.install(stacked, down)
 
-            accs_arr = eval_fn(strategy.trainable(stacked),
-                               test_toks, test_labs)
-            accs = [float(a) for a in np.asarray(accs_arr)]
+            evaluated = _do_eval(rnd, fed)
+            if evaluated:
+                accs_arr = eval_fn(strategy.trainable(stacked),
+                                   test_toks, test_labs)
+                accs = [float(a) for a in np.asarray(accs_arr)]
             round_losses = np.asarray(losses)[plan.sampled]
             history.append(_round_record(rnd, round_losses, accs, rc,
-                                         plan, t0))
+                                         plan, t0, evaluated=evaluated))
             if verbose:
                 _print_round(strategy, history[-1])
         states = client_batch.unstack_states(stacked)
@@ -567,15 +589,22 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     }
 
 
+def _do_eval(rnd: int, fed: FedConfig) -> bool:
+    """Eval-cadence predicate: every ``eval_every``-th round plus the last
+    (so ``final_accs``/``mean_acc`` always reflect the final states)."""
+    return rnd % fed.eval_every == 0 or rnd == fed.rounds - 1
+
+
 def _round_record(rnd: int, losses, accs: list, rc: comm.RoundComm,
-                  plan: sampling.ParticipationPlan, t0: float) -> RoundRecord:
+                  plan: sampling.ParticipationPlan, t0: float,
+                  evaluated: bool = True) -> RoundRecord:
     return RoundRecord(
         rnd, float(np.mean(losses)), accs,
         uplink_bytes=rc.uplink_bytes, downlink_bytes=rc.downlink_bytes,
         wall_s=time.time() - t0,
         participants=plan.participants.tolist(),
         sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
-        uplink_elems=rc.uplink_elems)
+        uplink_elems=rc.uplink_elems, evaluated=evaluated)
 
 
 def _print_round(strategy: Strategy, rec: RoundRecord) -> None:

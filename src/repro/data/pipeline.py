@@ -49,3 +49,25 @@ class Loader:
                 done += 1
                 if done >= n_batches:
                     return
+
+    def skip(self, n_batches: int) -> None:
+        """Advance the RNG stream exactly as one ``batches(n_batches)`` call
+        would, WITHOUT materializing any batch: no gathers, no copies —
+        only the per-epoch permutation draw (O(n), RNG-only) and the
+        short-batch resample draw are consumed, so a skipped stream and a
+        drawn stream are indistinguishable afterwards.  This is what lets
+        the scan engine's resume fast-forward ``rounds × m`` draw sessions
+        without replaying every minibatch (see repro.core.fed_engine)."""
+        full = self.n // self.batch_size
+        tail = self.n - full * self.batch_size      # short-batch size, 0 if none
+        done = 0
+        while done < n_batches:
+            self.rng.permutation(self.n)            # epoch() header
+            done += min(full, n_batches - done)
+            if done >= n_batches:
+                return
+            if tail and not self.drop_last:
+                # the epoch's short final batch: batches() pads it by
+                # resampling batch_size - tail extra rows
+                self.rng.integers(0, self.n, self.batch_size - tail)
+                done += 1

@@ -1,2 +1,5 @@
+from repro.kernels.tri_lora.ops import tri_lora_bwd_ref  # noqa: F401
 from repro.kernels.tri_lora.ops import tri_lora_matmul  # noqa: F401
 from repro.kernels.tri_lora.ref import tri_lora_matmul_ref  # noqa: F401
+from repro.kernels.tri_lora.tri_lora import tri_lora_dw_kernel  # noqa: F401
+from repro.kernels.tri_lora.tri_lora import tri_lora_dx_kernel  # noqa: F401

@@ -1,12 +1,27 @@
 """Jit'd public wrapper for the fused tri-LoRA projection.
 
 ``pl.pallas_call`` has no autodiff rule, so the wrapper carries a
-``jax.custom_vjp``: the forward runs the fused kernel; the backward is the
-analytic VJP of y = x@W + s·x@A@C@B as five f32-accumulated GEMM chains
-(every intermediate routed through the rank-r bottleneck, so the extra
-work is O(M·r + r·(d+k)) beyond the two big GEMMs dx/dW).  Gradients for
-all five operands are checked against ``jax.grad`` of the pure-jnp oracle
-in tests/test_kernels.py.
+``jax.custom_vjp``.  The forward runs the fused kernel.  The backward has
+two interchangeable implementations (DESIGN.md §11):
+
+* the REFERENCE chain (``fused_bwd=False``): the analytic VJP of
+  y = x@W + s·x@A@C@B as five f32-accumulated XLA GEMM chains — every
+  intermediate routed through the rank-r bottleneck, so the extra work is
+  O(M·r + r·(d+k)) beyond the two big GEMMs dx/dW.  This is the oracle the
+  fused path is verified against;
+* the FUSED path (``fused_bwd=True``): the two big-GEMM cotangents run as
+  Pallas kernels that mirror the forward's tiling —
+  ``tri_lora_dx_kernel`` fuses the rank-r epilogue Q@Aᵀ into the g@Wᵀ tile
+  loop (one read of the (M, N) cotangent for both terms instead of the
+  chain's two, no HBM-materialized transposes) and ``tri_lora_dw_kernel``
+  computes xᵀ@g with the M contraction innermost; the tiny rank-r factor
+  gradients dA/dC/dB stay XLA.
+
+``fused_bwd=None`` (default) resolves to ``not interpret`` — compiled/TPU
+executions take the fused kernels, interpret-mode (CPU CI) executions keep
+the XLA chain unless a caller asks for the kernel explicitly.  Gradients
+for all five operands are checked against ``jax.grad`` of the pure-jnp
+oracle in tests/test_kernels.py for both implementations.
 """
 from __future__ import annotations
 
@@ -15,7 +30,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tri_lora.tri_lora import tri_lora_matmul_kernel
+from repro.kernels.tri_lora.tri_lora import (tri_lora_dw_kernel,
+                                             tri_lora_dx_kernel,
+                                             tri_lora_matmul_kernel)
 
 
 def _pad_to(x, mult, axis):
@@ -46,20 +63,22 @@ def _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
     return out[:out.shape[0] - pad_m if pad_m else out.shape[0], :n]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
-def _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret, fused_bwd):
     return _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret)
 
 
-def _tri_lora_fwd(x2, w, a, c, b, scaling, bm, bn, bk, interpret):
+def _tri_lora_fwd(x2, w, a, c, b, scaling, bm, bn, bk, interpret, fused_bwd):
     return _forward(x2, w, a, c, b, scaling, bm, bn, bk, interpret), \
         (x2, w, a, c, b)
 
 
-def _tri_lora_bwd(scaling, bm, bn, bk, interpret, res, g):
-    """Analytic VJP of y = x@W + s·x@A@C@B (f32 accumulation throughout;
-    cotangents cast back to each operand's dtype — mirrors the forward's
-    accumulate-in-f32 / store-in-operand-dtype convention)."""
+def tri_lora_bwd_ref(res, g, scaling):
+    """The reference five-GEMM analytic VJP of y = x@W + s·x@A@C@B (f32
+    accumulation throughout; cotangents cast back to each operand's dtype —
+    mirrors the forward's accumulate-in-f32 / store-in-operand-dtype
+    convention).  Kept as the oracle the fused Pallas backward is verified
+    against (tests/test_kernels.py)."""
     x2, w, a, c, b = res
     f32 = jnp.float32
     dot = functools.partial(jnp.dot, preferred_element_type=f32)
@@ -76,19 +95,72 @@ def _tri_lora_bwd(scaling, bm, bn, bk, interpret, res, g):
             dc.astype(c.dtype), db.astype(b.dtype))
 
 
+def _bwd_fused(res, g, scaling, bm, bn, bk, interpret):
+    """Fused-kernel backward: dx and dW from the Pallas kernels (tiling
+    mirrored from the forward, rank-r epilogue fused into the dx tile
+    loop), dA/dC/dB from the rank-r XLA chains."""
+    x2, w, a, c, b = res
+    f32 = jnp.float32
+    dot = functools.partial(jnp.dot, preferred_element_type=f32)
+    gf = g.astype(f32)
+    af, cf, bf = a.astype(f32), c.astype(f32), b.astype(f32)
+    gb = dot(gf, bf.T)                      # (M, r)   ∂y/∂(x A C)
+    gc = dot(gb, cf.T)                      # (M, r)   shared by q and da
+    q = (scaling * gc).astype(g.dtype)      # (M, r)   dx epilogue
+
+    # ---- dx = g@Wᵀ + Q@Aᵀ  (pad M/K/N to tiles; padded N rows/cols of w
+    # and g are zero so they contribute nothing to the contraction)
+    gp, pad_m = _pad_to(g, bm, 0)
+    gp, _ = _pad_to(gp, bn, 1)
+    wp, _ = _pad_to(w, bk, 0)
+    wp, _ = _pad_to(wp, bn, 1)
+    qp, _ = _pad_to(q, bm, 0)
+    ap, _ = _pad_to(a, bk, 0)
+    dx = tri_lora_dx_kernel(gp, wp, qp, ap, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+    dx = dx[:dx.shape[0] - pad_m if pad_m else dx.shape[0], :x2.shape[1]]
+
+    # ---- dW = xᵀ@g  (padded M rows of x and g are zero: no contribution)
+    xp, _ = _pad_to(x2, bm, 0)
+    xp, _ = _pad_to(xp, bk, 1)
+    dw = tri_lora_dw_kernel(xp, gp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    dw = dw[:w.shape[0], :w.shape[1]]
+
+    # ---- rank-r factor gradients: tiny (r·(d+k) + r²) — plain XLA
+    xf = x2.astype(f32)
+    xa = dot(xf, af)                        # (M, r)
+    da = scaling * dot(xf.T, gc)
+    dc = scaling * dot(xa.T, gb)
+    db = scaling * dot(dot(xa, cf).T, gf)
+    return (dx.astype(x2.dtype), dw.astype(w.dtype), da.astype(a.dtype),
+            dc.astype(c.dtype), db.astype(b.dtype))
+
+
+def _tri_lora_bwd(scaling, bm, bn, bk, interpret, fused_bwd, res, g):
+    if fused_bwd is None:
+        fused_bwd = not interpret
+    if fused_bwd:
+        return _bwd_fused(res, g, scaling, bm, bn, bk, interpret)
+    return tri_lora_bwd_ref(res, g, scaling)
+
+
 _tri_lora.defvjp(_tri_lora_fwd, _tri_lora_bwd)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scaling", "interpret", "bm", "bn", "bk"))
+                   static_argnames=("scaling", "interpret", "bm", "bn", "bk",
+                                    "fused_bwd"))
 def tri_lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
                     c: jnp.ndarray, b: jnp.ndarray, scaling: float = 1.0,
                     *, bm: int = 256, bn: int = 256, bk: int = 512,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False,
+                    fused_bwd: bool | None = None) -> jnp.ndarray:
     """Fused y = x@W + scaling·x@A@C@B.  x may have leading batch dims.
-    Differentiable in all five array operands (custom VJP above)."""
+    Differentiable in all five array operands (custom VJP above);
+    ``fused_bwd`` selects the Pallas backward kernels (None → follow
+    ``not interpret``: fused when compiled, XLA chain in interpret mode)."""
     *lead, k = x.shape
     n = w.shape[1]
     x2 = x.reshape(-1, k)
-    out = _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret)
+    out = _tri_lora(x2, w, a, c, b, scaling, bm, bn, bk, interpret, fused_bwd)
     return out.reshape(*lead, n)

@@ -10,6 +10,20 @@ before write-back.  Extra HBM traffic ≈ M·r + r·N bytes ≈ 0.
 Grid: (M/bm, N/bn, K/bk), K innermost (sequential on TPU) with an f32 VMEM
 accumulator scratch.  bm/bn/bk are multiples of the MXU tile (128) for the
 full-size path; the wrapper pads otherwise.
+
+The BACKWARD mirrors the same tiling (DESIGN.md §11): the two big-GEMM
+cotangents are
+
+    dx = g @ Wᵀ + (s·g@Bᵀ@Cᵀ) @ Aᵀ        (M, K)
+    dW = xᵀ @ g                            (K, N)
+
+``tri_lora_dx_kernel`` fuses the rank-r epilogue Q@Aᵀ (Q = s·g@Bᵀ@Cᵀ, an
+(M, r) input like P in the forward) into the g@Wᵀ tile loop — W and A are
+read through transposed index maps, never materialized transposed in HBM —
+and ``tri_lora_dw_kernel`` is the transposed-LHS GEMM xᵀ@g with the M
+(contraction) axis innermost.  The rank-r factor gradients dA/dC/dB route
+through (M, r)/(r, r) intermediates and stay plain XLA ops (see
+repro.kernels.tri_lora.ops).
 """
 from __future__ import annotations
 
@@ -63,3 +77,100 @@ def tri_lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, p: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w, p, b)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels
+# ---------------------------------------------------------------------------
+
+def _dx_kernel(g_ref, w_ref, q_ref, a_ref, o_ref, acc_ref, *, n_c: int):
+    """One (bm, bk) tile of dx = g@Wᵀ + Q@Aᵀ; w/a arrive untransposed and
+    are contracted over their last/second axis in-register."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        # rank-r epilogue first: seed the accumulator with Q_tile @ Aᵀ_tile
+        acc_ref[...] = jax.lax.dot_general(
+            q_ref[...], a_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_c - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tri_lora_dx_kernel(g: jnp.ndarray, w: jnp.ndarray, q: jnp.ndarray,
+                       a: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+                       bk: int = 512, interpret: bool = False):
+    """g (M,N), w (K,N) read transposed, q (M,r) = s·g@Bᵀ@Cᵀ, a (K,r) read
+    transposed → dx (M,K) in g.dtype.  Mirrors the forward's tiling with N
+    (the contraction) innermost: grid (M/bm, K/bk, N/bn)."""
+    m, n = g.shape
+    k = w.shape[0]
+    r = q.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_c = n // bn
+    grid = (m // bm, k // bk, n_c)
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, n_c=n_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, cc: (i, cc)),
+            pl.BlockSpec((bk, bn), lambda i, j, cc: (j, cc)),   # Wᵀ tile
+            pl.BlockSpec((bm, r), lambda i, j, cc: (i, 0)),
+            pl.BlockSpec((bk, r), lambda i, j, cc: (j, 0)),     # Aᵀ tile
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, cc: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(g, w, q, a)
+
+
+def _dw_kernel(x_ref, g_ref, o_ref, acc_ref, *, n_c: int):
+    """One (bk, bn) tile of dW = xᵀ@g; x arrives untransposed and is
+    contracted over its first (M) axis in-register."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_c - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tri_lora_dw_kernel(x: jnp.ndarray, g: jnp.ndarray, *, bm: int = 256,
+                       bn: int = 256, bk: int = 512,
+                       interpret: bool = False):
+    """x (M,K) read transposed, g (M,N) → dW (K,N) in x.dtype.  Grid
+    (K/bk, N/bn, M/bm) with the M contraction innermost (sequential)."""
+    m, k = x.shape
+    _, n = g.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_c = m // bm
+    grid = (k // bk, n // bn, n_c)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, n_c=n_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, cc: (cc, i)),   # xᵀ tile
+            pl.BlockSpec((bm, bn), lambda i, j, cc: (cc, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, cc: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, g)

@@ -69,7 +69,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         participation: float = 1.0, sampler: str = "uniform",
         straggler_frac: float = 0.0, engine: str = "eager",
         chunk_rounds: int = 8, resume: bool = False,
-        uplink_codec: str = "none") -> dict:
+        uplink_codec: str = "none", scan_donate: bool = True,
+        scan_prefetch: bool = True) -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
     assert engine in ("eager", "scan"), engine
     vectorized = client_parallelism == "vmap"
@@ -153,7 +154,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             stacked=stacked, plans=plans, method=method, clients=clients,
             rounds=rounds, chunk_rounds=chunk_rounds, seed=seed,
             ckpt=ckpt, resume=resume, verbose=verbose,
-            codec=codec, compressed=compressed, payload_of=payload_of)
+            codec=codec, compressed=compressed, payload_of=payload_of,
+            donate=scan_donate, prefetch=scan_prefetch)
         return {"history": history, "adapters": adapters, "cfg": cfg,
                 "base": base}
 
@@ -282,14 +284,19 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
 def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                  clients: int, rounds: int, chunk_rounds: int, seed: int,
                  ckpt: str | None, resume: bool, verbose: bool,
-                 codec=None, compressed: bool = False, payload_of=None):
+                 codec=None, compressed: bool = False, payload_of=None,
+                 donate: bool = True, prefetch: bool = True):
     """Compiled LM rounds: one jitted ``lax.scan`` dispatch per chunk of
     rounds (mirrors :mod:`repro.core.fed_engine` for the classification
     runtime; DESIGN.md §9).  Checkpoints the full stacked adapter state at
     chunk boundaries; ``resume`` restores it, fast-forwards the data
     streams, and continues bit-for-bit.  With an active ``codec`` the
     error-feedback residual joins the scanned carry and the checkpoint, and
-    bytes are priced on the encoded pytree (DESIGN.md §10)."""
+    bytes are priced on the encoded pytree (DESIGN.md §10).  ``donate`` and
+    ``prefetch`` are the §11 pipeline knobs: the stacked adapter carry is
+    donated to the chunk program (old handles deleted — any re-read
+    raises), and a background thread draws/stacks the next chunk's batches
+    while the current chunk computes."""
     chunk = max(1, int(chunk_rounds))
     vfit = jax.vmap(local_fit_raw)
     pstack = sampling.stack_plans(plans, clients)
@@ -341,10 +348,14 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         loss = jnp.sum(ls[:, -1] * sm) / jnp.maximum(jnp.sum(sm), 1.0)
         return (stk, ef), loss
 
-    run_chunk = jax.jit(lambda c, xs: jax.lax.scan(round_step, c, xs))
+    scan_fn = lambda c, xs: jax.lax.scan(round_step, c, xs)
+    run_chunk = (jax.jit(scan_fn, donate_argnums=(0,)) if donate
+                 else jax.jit(scan_fn))
 
     hist_loss: list = []
     hist_wall: list = []
+    hist_host: list = []
+    hist_dev: list = []
     start = 0
     if resume and ckpt and not os.path.exists(ckpt):
         warnings.warn(f"--resume: no checkpoint at {ckpt!r} — starting "
@@ -374,30 +385,36 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         stacked, ef = tree["state"], tree["ef"]
         hist_loss = [float(v) for v in tree["loss"]]
         hist_wall = [float(v) for v in tree["wall"]]
+        hist_host = [0.0] * start
+        hist_dev = [0.0] * start
         for _ in range(start):          # fast-forward the data streams
             for i in range(clients):
                 draw(i)
         if verbose:
             print(f"resumed {start} rounds from {ckpt}", flush=True)
 
-    carry = (stacked, ef)
-    for c0 in range(start, rounds, chunk):
-        c1 = min(c0 + chunk, rounds)
-        t0 = time.time()
-        drawn = [[draw(i) for i in range(clients)] for _ in range(c0, c1)]
+    def produce(n_rounds: int):
+        drawn = [[draw(i) for i in range(clients)] for _ in range(n_rounds)]
         toks = jnp.asarray(np.stack([np.stack([d[0] for d in rr])
                                      for rr in drawn]))
         labs = jnp.asarray(np.stack([np.stack([d[1] for d in rr])
                                      for rr in drawn]))
+        return toks, labs
+
+    def dispatch(carry, batches, c0, c1):
+        toks, labs = batches
         xs = (toks, labs,
               jnp.asarray(pstack.sampled_mask[c0:c1]),
               jnp.asarray(pstack.participant_mask[c0:c1]),
               jnp.arange(c0, c1, dtype=jnp.int32))
         carry, losses = run_chunk(carry, xs)
-        losses = np.asarray(losses)          # one host sync per chunk
-        per_round = (time.time() - t0) / (c1 - c0)
-        hist_loss += [float(v) for v in losses]
-        hist_wall += [per_round] * (c1 - c0)
+        return carry, np.asarray(losses)         # one host sync per chunk
+
+    def on_chunk(carry, c0, c1, losses, host_s, device_s, wall_s):
+        hist_loss.extend(float(v) for v in losses)
+        hist_wall.extend([wall_s] * (c1 - c0))
+        hist_host.extend([host_s] * (c1 - c0))
+        hist_dev.extend([device_s] * (c1 - c0))
         if ckpt:
             save(ckpt, {"state": carry[0], "ef": carry[1],
                         "loss": np.asarray(hist_loss, np.float32),
@@ -407,8 +424,14 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                            "clients": clients, "seed": seed,
                            "uplink_codec": codec.name})
         if verbose:
-            print(f"rounds {c0:3d}–{c1 - 1:3d}  loss {hist_loss[-1]:.4f}  "
-                  f"({per_round:.1f}s/round)", flush=True)
+            print(f"rounds {c0:3d}–{c1 - 1:3d}  loss "
+                  f"{hist_loss[-1]:.4f}  ({wall_s:.1f}s/round)", flush=True)
+
+    carry = client_batch.drive_chunks(
+        (stacked, ef),
+        [(c0, min(c0 + chunk, rounds))
+         for c0 in range(start, rounds, chunk)],
+        produce, dispatch, on_chunk, donate=donate, prefetch=prefetch)
     stacked = carry[0]
 
     history = [{"round": rnd, "loss": hist_loss[rnd],
@@ -416,7 +439,8 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                 "uplink_bytes": per_b * plans[rnd].n_participants,
                 "downlink_bytes": per_down_b * plans[rnd].n_participants,
                 "participants": plans[rnd].participants.tolist(),
-                "wall_s": hist_wall[rnd]}
+                "wall_s": hist_wall[rnd],
+                "host_s": hist_host[rnd], "device_s": hist_dev[rnd]}
                for rnd in range(rounds)]
     return history, client_batch.unstack_states(stacked)
 
@@ -452,6 +476,12 @@ def main():
                     choices=["none", "bf16", "int8", "int4"],
                     help="quantized uplink compression with error feedback "
                          "(repro.core.compress, DESIGN.md §10)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="scan engine: disable carry buffer donation "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="scan engine: disable overlapped chunk prefetch "
+                         "(DESIGN.md §11)")
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
@@ -461,7 +491,9 @@ def main():
               participation=args.participation, sampler=args.sampler,
               straggler_frac=args.straggler_frac, engine=args.engine,
               chunk_rounds=args.chunk_rounds, resume=args.resume,
-              uplink_codec=args.uplink_codec)
+              uplink_codec=args.uplink_codec,
+              scan_donate=not args.no_donate,
+              scan_prefetch=not args.no_prefetch)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

@@ -37,13 +37,17 @@ def test_tri_lora_kernel(m, k, n, r, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
-# all five operands, padded (96,160,130) and unpadded (64,64,64) shapes
+# all five operands, padded (96,160,130) and unpadded (64,64,64) shapes,
+# both backward implementations: the five-GEMM XLA chain (fused_bwd=False,
+# the oracle-adjacent reference) and the fused Pallas dx/dW kernels
+# (fused_bwd=True, interpret mode on CPU)
 @pytest.mark.parametrize("m,k,n,r", [(64, 64, 64, 4),    # exact tiles
                                      (96, 160, 130, 8),  # pads every dim
                                      (32, 256, 64, 16),
                                      (128, 64, 192, 2)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_tri_lora_kernel_backward(m, k, n, r, dtype):
+@pytest.mark.parametrize("fused_bwd", [False, True])
+def test_tri_lora_kernel_backward(m, k, n, r, dtype, fused_bwd):
     """jax.grad through the Pallas kernel (custom VJP) matches jax.grad of
     the pure-jnp oracle for x, W, A, C and B."""
     x = jnp.asarray(RNG.standard_normal((m, k)), dtype)
@@ -54,7 +58,8 @@ def test_tri_lora_kernel_backward(m, k, n, r, dtype):
     ct = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)  # cotangent
 
     def loss_kernel(*ops):
-        y = tri_lora_matmul(*ops, 2.0, bm=32, bn=64, bk=32, interpret=True)
+        y = tri_lora_matmul(*ops, 2.0, bm=32, bn=64, bk=32, interpret=True,
+                            fused_bwd=fused_bwd)
         return jnp.sum(y.astype(jnp.float32) * ct)
 
     def loss_ref(*ops):

@@ -93,3 +93,50 @@ def test_pairwise_model_similarity_shape():
     s = cka.pairwise_model_similarity(trees, jax.random.key(99), 16)
     assert s.shape == (3, 3)
     assert np.allclose(np.diag(np.asarray(s)), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [3, 16, 33])
+def test_center_matches_explicit_hkh(n):
+    """The O(n²) double mean-centering is exactly H @ K @ H (H = I − 1/n),
+    the materialized O(n³) form it replaced."""
+    k = jnp.asarray(np.random.default_rng(n).standard_normal((n, n)),
+                    jnp.float32)
+    h = jnp.eye(n) - jnp.full((n, n), 1.0 / n)
+    np.testing.assert_allclose(np.asarray(cka._center(k)),
+                               np.asarray(h @ k @ h), atol=1e-5)
+    # hsic = tr(HKH · HLH) without forming the product — check vs the trace,
+    # including a non-symmetric L (the generic contract)
+    l_ = jnp.asarray(np.random.default_rng(n + 1).standard_normal((n, n)),
+                     jnp.float32)
+    ref = jnp.trace((h @ k @ h) @ (h @ l_ @ h))
+    np.testing.assert_allclose(float(cka.hsic(k, l_)), float(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_cka_matches_naive_hkh():
+    """Full pairwise S^model regression vs an inline naive H@K@H + trace
+    implementation (the pre-§11 algebra, recomputed here from scratch)."""
+    m, mods, r, n_probes = 3, 2, 4, 16
+    cs = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (m, mods, r, r)), jnp.float32)
+    key = jax.random.key(12)
+    s = np.asarray(cka._pairwise_cka_stacked(cs, key, n_probes))
+
+    probes = jax.random.normal(key, (n_probes, r), jnp.float32)
+    h = np.eye(n_probes) - np.full((n_probes, n_probes), 1.0 / n_probes)
+
+    def naive_cka(ci, cj):
+        vals = []
+        for mod in range(mods):
+            ka = np.asarray(cka.linear_kernel_of_c(ci[mod], probes))
+            kb = np.asarray(cka.linear_kernel_of_c(cj[mod], probes))
+            kac, kbc = h @ ka @ h, h @ kb @ h
+            hij = np.trace(kac @ kbc)
+            hii = np.trace(kac @ kac)
+            hjj = np.trace(kbc @ kbc)
+            vals.append(hij / max(np.sqrt(hii * hjj), 1e-12))
+        return float(np.mean(vals))
+
+    ref = np.array([[naive_cka(np.asarray(cs[i]), np.asarray(cs[j]))
+                     for j in range(m)] for i in range(m)])
+    np.testing.assert_allclose(s, ref, atol=1e-4)
