@@ -1,0 +1,163 @@
+"""Host-backed cohort streaming at 10⁴+ clients (DESIGN.md §12).
+
+The device-resident engines stack the WHOLE population on device: resident
+bytes grow O(m) and the client count caps at accelerator memory.  The
+``client_store="host"`` backend keeps the population in host numpy and
+materializes only the round's cohort (k sampled clients) on device, plus —
+for personalized aggregation — the O(m) bank of r×r C payloads (bytes per
+client ≈ the paper's uplink, orders of magnitude under the full adapter +
+optimizer row).  This bench measures both claims:
+
+* resident device bytes: device store (full stacked state) vs host store
+  (cohort rows + payload/EF banks + one eval slab), structurally priced
+  from the same state layout both engines use — at m = 10 000, k = 16 the
+  host residency must stay under 10% of the device store's (the floor is
+  the payload-bank/full-state ratio: the r×r C rows are ~20× smaller than
+  a client's full adapter + head + EF state);
+* rounds/sec of the host engine as m sweeps 100 → 1 000 → 10 000 with k
+  FIXED — the device work per round tracks the cohort, not the population
+  (the remaining O(m) host terms are the per-round RNG fast-forward of the
+  m loaders and the last round's full-population eval).
+
+``--smoke`` (the CI entry, registered in benchmarks/run.py) shrinks to
+m = 16 and additionally cross-checks the host history against the device
+engine (same contract as tests/test_client_store.py).
+
+Usage:  PYTHONPATH=src python benchmarks/fed_cohort.py [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import comm  # noqa: E402
+from repro.core.baselines import STRATEGIES  # noqa: E402
+from repro.core.fed_model import FedTask  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+
+SEQ, VOCAB, N_CLASSES = 8, 256, 6
+
+
+def bench_setup(m: int):
+    cfg = ModelConfig(
+        name="cohortbench", family="dense", n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=VOCAB,
+        rope_theta=1e4, layer_pattern=("attn",), param_dtype="float32",
+        lora_rank=4)
+    task = FedTask.create(jax.random.key(0), cfg, N_CLASSES)
+    ctrain, ctest, _ = synthetic.make_federated_classification(
+        0, m, 8, 8, SEQ, VOCAB, N_CLASSES, alpha=0.5, drift=1.5,
+        n_groups=3, class_sep=1.2)
+    return task, ctrain, ctest
+
+
+def _fed(m: int, k: int, rounds: int, store: str) -> FedConfig:
+    return FedConfig(method="celora", n_clients=m, rounds=rounds,
+                     local_steps=1, batch_size=2, lr=1e-2, seed=0,
+                     participation=k / m, use_data_sim=False, cka_probes=8,
+                     engine="scan", chunk_rounds=rounds,
+                     eval_every=rounds,            # eval only the last round
+                     client_store=store)
+
+
+def resident_bytes(task, m: int, k: int) -> dict:
+    """Structural device-residency accounting from the shared state layout:
+    what each backend must keep on device between gathers (banks, cohort)
+    or permanently (the stacked population)."""
+    strategy = STRATEGIES["celora"]
+    state = strategy.init_state(task.init_client(jax.random.key(1)))
+    per_client = comm.tree_bytes(state)
+    payload_b = comm.tree_bytes(strategy.uplink(state))
+    eval_slab = max(k, min(m, 64)) * SEQ * 8 * 4        # token/label slab
+    return {
+        "device_store_bytes": per_client * m,
+        "host_store_bytes": per_client * k + payload_b * m + eval_slab,
+        "per_client_bytes": per_client,
+        "payload_bank_bytes_per_client": payload_b,
+    }
+
+
+def run_store(store: str, task, ctrain, ctest, *, m: int, k: int,
+              rounds: int) -> dict:
+    out = run_federated(task, _fed(m, k, rounds, store), ctrain, ctest)
+    wall = sum(r.wall_s for r in out["history"])
+    return {"store": store, "m": m, "k": k, "rounds": rounds,
+            "rounds_per_sec": rounds / wall, "wall_s": wall,
+            "mean_acc": out["mean_acc"],
+            "history": [(r.round, float(r.train_loss)) for r
+                        in out["history"]]}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=16 + host≡device history cross-check")
+    ap.add_argument("--json", default=None, metavar="F")
+    a = ap.parse_args(argv)
+
+    report: dict = {"mode": "smoke" if a.smoke else "full", "sweeps": []}
+    if a.smoke:
+        m, k, rounds = 16, 4, 3
+        task, ctrain, ctest = bench_setup(m)
+        dev = run_store("device", task, ctrain, ctest, m=m, k=k,
+                        rounds=rounds)
+        host = run_store("host", task, ctrain, ctest, m=m, k=k,
+                         rounds=rounds)
+        for (_, l_dev), (_, l_host) in zip(dev["history"],
+                                           host["history"]):
+            assert abs(l_dev - l_host) < 1e-4, (l_dev, l_host)
+        assert abs(dev["mean_acc"] - host["mean_acc"]) < 1e-3
+        report["sweeps"] = [dev, host]
+        report["equivalent"] = True
+        print(f"# fed_cohort --smoke: host ≡ device over {rounds} rounds "
+              f"(m={m}, k={k}) OK")
+        sweep_ms = [m]
+    else:
+        sweep_ms = [100, 1_000, 10_000]
+        k, rounds = 16, 3
+        print(f"# fed_cohort — host-backed cohort streaming, k={k} fixed, "
+              f"rounds={rounds}")
+        print("store,m,k,rounds_per_sec,device_resident_MiB,"
+              "host_resident_MiB")
+        for m in sweep_ms:
+            t0 = time.time()
+            task, ctrain, ctest = bench_setup(m)
+            setup_s = time.time() - t0
+            res = run_store("host", task, ctrain, ctest, m=m, k=k,
+                            rounds=rounds)
+            mem = resident_bytes(task, m, k)
+            res.update(mem, setup_s=setup_s)
+            report["sweeps"].append(res)
+            print(f"host,{m},{k},{res['rounds_per_sec']:.2f},"
+                  f"{mem['device_store_bytes'] / 2**20:.1f},"
+                  f"{mem['host_store_bytes'] / 2**20:.1f}")
+        big = report["sweeps"][-1]
+        frac = big["host_store_bytes"] / big["device_store_bytes"]
+        report["resident_fraction_at_max_m"] = frac
+        print(f"# m={sweep_ms[-1]}: host device-residency = "
+              f"{100 * frac:.2f}% of the stacked population")
+        assert frac < 0.10, (
+            f"host residency {100 * frac:.1f}% of device at m={sweep_ms[-1]}"
+            f" — cohort streaming no longer bounds resident memory")
+
+    mem = resident_bytes(bench_setup(4)[0] if a.smoke else task,
+                         sweep_ms[-1], 16)
+    report["memory_model"] = mem
+    if a.json:
+        Path(a.json).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {a.json}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

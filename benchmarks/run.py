@@ -38,6 +38,7 @@ BENCHES = {}
 
 def _register():
     import beyond_selfweight
+    import fed_cohort
     import fed_comm
     import fed_compress
     import fed_partial
@@ -70,6 +71,8 @@ def _register():
         "fed_partial": fed_partial.main,          # partial participation (ours)
         "fed_scale": fed_scale.main,              # client-dispatch scaling (ours)
         "fed_scan": fed_scan.main,                # eager vs scan engine (ours)
+        "fed_cohort":                             # §12 client stores (ours)
+            lambda quick: fed_cohort.main(["--smoke"] if quick else []),
         "fed_pipeline":                           # §11 pipeline stages (ours)
             lambda quick: fed_pipeline.main(["--quick"] if quick else []),
         "fed_compress":                           # uplink codec sweep (ours)

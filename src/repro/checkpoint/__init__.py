@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import metadata, restore, save  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    check_fingerprint, metadata, restore, save)

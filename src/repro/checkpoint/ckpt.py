@@ -68,12 +68,17 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
         raise
 
 
-def restore(path: str, like: Any) -> Any:
+def restore(path: str, like: Any, *, as_numpy: bool = False) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated).
 
     Mismatches raise ``KeyError`` / ``ValueError`` with the offending leaf
     path — restoring a checkpoint into the wrong model/run configuration
     must fail loudly, not with a bare assert (or, worse, silently).
+
+    ``as_numpy=True`` keeps the restored leaves as host numpy arrays
+    instead of device-putting them — the host-backed client store restores
+    a whole population this way, so the device never sees more than the
+    active cohort (DESIGN.md §12).
     """
     with np.load(path) as data:
         dtypes = json.loads(bytes(data["__dtypes__"]).decode())
@@ -92,13 +97,21 @@ def restore(path: str, like: Any) -> Any:
             arr = data[key]
             if dtypes[key] == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
-            want = jnp.asarray(leaf)
-            if arr.shape != want.shape:
+            # shape/dtype come from attribute access so `like` may hold
+            # numpy or jax arrays (or ShapeDtypeStructs) without forcing a
+            # device transfer of the template itself
+            want_shape = tuple(np.shape(leaf))
+            want_dtype = np.dtype(getattr(leaf, "dtype",
+                                          np.asarray(leaf).dtype))
+            if arr.shape != want_shape:
                 raise ValueError(
                     f"checkpoint leaf {key!r} has shape {arr.shape} but the "
-                    f"restore target expects {want.shape} — the checkpoint "
+                    f"restore target expects {want_shape} — the checkpoint "
                     f"was written for a different model/run configuration")
-            leaves.append(jnp.asarray(arr, want.dtype))
+            if as_numpy:
+                leaves.append(np.asarray(arr).astype(want_dtype, copy=False))
+            else:
+                leaves.append(jnp.asarray(arr, want_dtype))
         return jax.tree.unflatten(treedef, leaves)
 
 
@@ -107,3 +120,27 @@ def metadata(path: str) -> dict:
         if "__meta__" in data:
             return json.loads(bytes(data["__meta__"]).decode())
     return {}
+
+
+def check_fingerprint(path: str, meta: dict, want: dict, *,
+                      defaults: dict | None = None,
+                      ignore: tuple = ()) -> None:
+    """Refuse resuming across a run-configuration change.
+
+    ``meta`` is the checkpoint's stored metadata (mutated in place:
+    ``defaults`` are backfilled for fingerprint fields older checkpoints
+    did not record — e.g. ``uplink_codec`` pre-§10, ``client_store``
+    pre-§12 — so old checkpoints keep resuming under the default they were
+    written with).  ``want`` is the current run's fingerprint; any field
+    not in ``ignore`` that differs raises ``ValueError`` naming the
+    mismatched fields.
+    """
+    for k, v in (defaults or {}).items():
+        meta.setdefault(k, v)
+    stale = {k: (meta.get(k), v) for k, v in want.items()
+             if k not in ignore and meta.get(k) != v}
+    if stale:
+        raise ValueError(
+            f"checkpoint {path!r} was written by a different run "
+            f"configuration; refusing to resume (mismatched fields: "
+            f"{ {k: f'{a!r} != {b!r}' for k, (a, b) in stale.items()} })")

@@ -60,6 +60,23 @@ def select_clients(mask: Any, new: Any, old: Any) -> Any:
             mask.reshape((-1,) + (1,) * (n_.ndim - 1)), n_, o_), new, old)
 
 
+def gather_clients(stacked: Any, ids: Any) -> Any:
+    """Rows ``ids`` of a stacked pytree: leaves (m, …) → (k, …).  The cohort
+    gather of the :mod:`repro.core.client_store` runtime — ``ids`` may be a
+    traced int array (static length), so it composes under jit."""
+    ids = jnp.asarray(ids, jnp.int32)
+    return jax.tree.map(lambda l: l[ids], stacked)
+
+
+def scatter_clients(stacked: Any, ids: Any, values: Any) -> Any:
+    """Functional inverse of :func:`gather_clients`: write rows ``ids`` of
+    ``values`` (leaves (k, …)) back into ``stacked`` (leaves (m, …)).
+    ``ids`` must be unique; duplicate rows would race in the scatter."""
+    ids = jnp.asarray(ids, jnp.int32)
+    return jax.tree.map(lambda l, v: l.at[ids].set(v.astype(l.dtype)),
+                        stacked, values)
+
+
 def broadcast_to_clients(tree: Any, m: int) -> Any:
     """Replicate one (global) pytree across the client axis — used to install
     a FedAvg downlink into a stacked state."""
@@ -78,6 +95,31 @@ def stack_client_batches(loaders: Sequence, n_batches: int
     """
     toks, labs = [], []
     for ld in loaders:
+        bt = list(ld.batches(n_batches))
+        toks.append(np.stack([b["tokens"] for b in bt]))
+        labs.append(np.stack([b["labels"] for b in bt]))
+    return jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labs))
+
+
+def stack_cohort_batches(loaders: Sequence, ids, n_batches: int
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One round's batches for the COHORT only: ``(k, n_batches, B, T)``
+    tokens / ``(k, n_batches, B)`` labels for the clients in ``ids``
+    (ascending, matching the sorted cohort order of
+    :class:`repro.core.sampling.ParticipationPlan`).
+
+    Every OTHER client's loader is RNG-fast-forwarded with
+    :meth:`repro.data.pipeline.Loader.skip` — draw-equivalent to the all-m
+    engines' :func:`stack_client_batches`, so the host-backed cohort
+    runtime consumes the identical per-client data streams without
+    materializing a single non-cohort batch.
+    """
+    sel = {int(i) for i in np.asarray(ids)}
+    toks, labs = [], []
+    for i, ld in enumerate(loaders):
+        if i not in sel:
+            ld.skip(n_batches)
+            continue
         bt = list(ld.batches(n_batches))
         toks.append(np.stack([b["tokens"] for b in bt]))
         labs.append(np.stack([b["labels"] for b in bt]))

@@ -88,8 +88,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core import (aggregation, client_batch, comm, compress, sampling,
-                        tri_lora)
+from repro.core import (aggregation, client_batch, client_store, comm,
+                        compress, sampling, tri_lora)
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka
 
@@ -100,11 +100,15 @@ _SCAN_CACHE = JitCache(maxsize=8)
 # participation plans makes the stored state meaningless.  uplink_codec is
 # here because the EF residual in the stored state is meaningful only under
 # the codec that produced it: resuming across a codec change is refused.
+# client_store is here because the stored tree's residency contract (and
+# the host engine's bank rebuild on restore) is backend-specific; missing
+# in pre-§12 checkpoints, backfilled to "device" on load.
 _FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
                        "batch_size", "lr", "seed", "participation",
                        "sampler", "straggler_frac", "use_data_sim",
                        "use_model_sim", "cka_probes", "self_weight",
-                       "pfedme_eta", "uplink_codec", "eval_every")
+                       "pfedme_eta", "uplink_codec", "eval_every",
+                       "client_store")
 
 
 def _fingerprint(fed) -> dict:
@@ -228,14 +232,12 @@ def _load_state(fed, stacked, s_model, m: int):
     if "rounds_done" not in meta:
         raise ValueError(f"{fed.checkpoint_path!r} is not a scan-engine "
                          f"checkpoint (no rounds_done in metadata)")
-    want = _fingerprint(fed)
-    meta.setdefault("uplink_codec", "none")       # pre-codec checkpoints
-    meta.setdefault("eval_every", 1)              # pre-§11 checkpoints
-    stale = {k: (meta.get(k), v) for k, v in want.items()
-             if k != "rounds" and meta.get(k) != v}
-    if stale:
-        raise ValueError(f"checkpoint {fed.checkpoint_path!r} was written "
-                         f"by a different run configuration: {stale}")
+    ckpt.check_fingerprint(
+        fed.checkpoint_path, meta, _fingerprint(fed),
+        defaults={"uplink_codec": "none",      # pre-codec checkpoints
+                  "eval_every": 1,             # pre-§11 checkpoints
+                  "client_store": "device"},   # pre-§12 checkpoints
+        ignore=("rounds",))
     rounds_done = int(meta["rounds_done"])
     if rounds_done > fed.rounds:
         raise ValueError(f"checkpoint has {rounds_done} completed rounds "
@@ -267,13 +269,14 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
     mode = fed.client_parallelism
     chunk = max(1, int(fed.chunk_rounds))
 
-    stacked = client_batch.stack_states(states)
-    put = lambda t: t
-    if mode == "shard":
-        from repro.launch import mesh as mesh_lib
-        cmesh = mesh_lib.make_client_mesh(m)
-        put = lambda t: mesh_lib.shard_clients(cmesh, t)
-        stacked = put(stacked)
+    # population placement via the store (DESIGN.md §12): "device" keeps
+    # the legacy layout (honoring the "shard" parallelism mode), "sharded"
+    # lays the client axis over the device mesh; "host" never reaches this
+    # engine (run_federated dispatches it to client_store.run_cohort)
+    pstore = client_store.make_store(fed.client_store, states,
+                                     parallelism=mode)
+    stacked = pstore.resident()
+    put = pstore.place
 
     pstack = sampling.stack_plans(plans, m)
     codec = compress.get_codec(fed.uplink_codec)

@@ -76,7 +76,6 @@ equivalent to the eager history in tests/test_fed_engine.py.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 import warnings
 from typing import Any, Optional
@@ -85,8 +84,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (aggregation, client_batch, comm, compress, sampling,
-                        tri_lora)
+from repro.core import (aggregation, client_batch, client_store, comm,
+                        compress, sampling, tri_lora)
 from repro.core.baselines import Strategy, get_strategy
 from repro.core.fed_model import FedTask
 from repro.core.jit_cache import JitCache
@@ -117,6 +116,8 @@ class FedConfig:
     seed: int = 0
     # --- client dispatch: "loop" (reference) | "vmap" | "shard" ------------
     client_parallelism: str = "vmap"
+    # --- population residency (repro.core.client_store, DESIGN.md §12) -----
+    client_store: str = "device"      # "device" | "sharded" | "host"
     # --- round dispatch (repro.core.fed_engine, DESIGN.md §9) --------------
     engine: str = "eager"             # "eager" | "scan" (compiled rounds)
     chunk_rounds: int = 8             # scan: rounds fused per dispatch
@@ -281,6 +282,13 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                          "(the eager engine does not checkpoint)")
     if fed.eval_every < 1:
         raise ValueError(f"eval_every must be >= 1; got {fed.eval_every}")
+    if fed.client_store not in client_store.STORE_BACKENDS:
+        raise ValueError(f"client_store={fed.client_store!r}; expected one "
+                         f"of {client_store.STORE_BACKENDS}")
+    if fed.client_store != "device" and mode == "loop":
+        raise ValueError(f"client_store={fed.client_store!r} requires a "
+                         f"vectorized client_parallelism ('vmap'/'shard'); "
+                         f"the loop path is the device-store reference")
     m = fed.n_clients
     sampling.n_sampled(m, fed.participation)      # validates participation
     if not 0.0 <= fed.straggler_frac < 1.0:
@@ -301,6 +309,11 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         # engine, returned with the final states
         states = [dict(s, ef=compress.init_ef(strategy.uplink(s)))
                   for s in states]
+    if fed.client_store == "host":
+        # the population is host-resident from the start: per-client device
+        # init states move off-device here, so peak device memory is set by
+        # the cohort, never the population (DESIGN.md §12)
+        states = [jax.tree.map(np.asarray, s) for s in states]
     loaders = [Loader(client_train[i], fed.batch_size, seed=fed.seed + i)
                for i in range(m)]
     sample_counts = [len(d["labels"]) for d in client_train]
@@ -362,8 +375,13 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         n = len(d["labels"])
         tk[i, :n] = d["tokens"]
         lb[i, :n] = d["labels"]
-    test_toks = jnp.asarray(tk)
-    test_labs = jnp.asarray(lb)
+    if fed.client_store == "host":
+        # the host-backed cohort runtime slabs the test stacks through the
+        # device itself — don't materialize the (m, pad, T) stack up front
+        test_toks, test_labs = tk, lb
+    else:
+        test_toks = jnp.asarray(tk)
+        test_labs = jnp.asarray(lb)
 
     def _eval_one(trainable, toks, labs):
         eff = strategy.effective_adapter(trainable)
@@ -376,6 +394,16 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     s_data = None
     if strategy.aggregate == "personalized" and fed.use_data_sim:
         s_data = data_similarity(task, fed, client_train)
+
+    # ---- store dispatch: the host-backed population runs its own
+    # cohort-resident engine (both round-dispatch modes) — see
+    # repro.core.client_store (DESIGN.md §12)
+    if fed.client_store == "host":
+        return client_store.run_cohort(
+            task=task, fed=fed, strategy=strategy, states=states,
+            loaders=loaders, sample_counts=sample_counts, plans=plans,
+            local_fit=_local_fit, eval_one=_eval_one, s_data=s_data,
+            test_toks=test_toks, test_labs=test_labs, verbose=verbose)
 
     # ---- engine dispatch: the compiled multi-round engine fuses the whole
     # round into one program and scans it over chunks of rounds — see
@@ -500,15 +528,14 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             if verbose:
                 _print_round(strategy, history[-1])
     else:
-        # ---- vectorized path: ONE batched program per round
-        stacked = client_batch.stack_states(states)
-        if mode == "shard":
-            from repro.launch import mesh as mesh_lib
-            cmesh = mesh_lib.make_client_mesh(m)
-            put = functools.partial(mesh_lib.shard_clients, cmesh)
-            stacked = put(stacked)
-        else:
-            put = lambda t: t
+        # ---- vectorized path: ONE batched program per round.  The store
+        # owns population placement: "device" keeps the legacy layout (with
+        # the "shard" parallelism mode's mesh placement preserved) and
+        # "sharded" lays the client axis over the device mesh
+        pstore = client_store.make_store(fed.client_store, states,
+                                         parallelism=mode)
+        stacked = pstore.resident()
+        put = pstore.place
 
         for rnd in range(fed.rounds):
             plan = plans[rnd]

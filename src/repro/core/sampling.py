@@ -61,6 +61,23 @@ class ParticipationPlan:
         out[getattr(self, which)] = True
         return out
 
+    @property
+    def cohort(self) -> np.ndarray:
+        """The round's COHORT: the client ids whose state a
+        :mod:`repro.core.client_store` backend must materialize on device.
+        This is ``sampled``, not ``participants`` — stragglers train (their
+        state advances) even though their upload is discarded, so the
+        gather/write-back set is the sampled ids."""
+        return self.sampled
+
+    def cohort_mask(self) -> np.ndarray:
+        """Boolean (k,) participation mask over the SORTED cohort: entry j
+        is True iff ``sampled[j]`` completed the round (uploaded).  This is
+        the cohort-local view of ``mask(m)`` — ``mask(m)[sampled] ==
+        cohort_mask()`` — used by cohort-resident engines whose install
+        select runs over k rows instead of m."""
+        return np.isin(self.sampled, self.participants)
+
 
 def n_sampled(m: int, participation: float) -> int:
     """Clients sampled per round: round(participation·m), clamped to [1, m]."""

@@ -45,7 +45,8 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
                 train_layout: str = "mixed",
                 fed_bf16: bool = False,
                 microbatches: int = 1,
-                attn_impl: str = "auto") -> dict:
+                attn_impl: str = "auto",
+                art_dir: str = ART) -> dict:
     t0 = time.time()
     cfg = st.shape_variant(get_config(arch), shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -199,7 +200,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         rec["cost"] = {"error": str(e)}
 
     mesh_tag = rec["mesh"] + ("_fed" if fed else "")
-    out_dir = os.path.join(ART, mesh_tag)
+    out_dir = os.path.join(art_dir, mesh_tag)
     os.makedirs(out_dir, exist_ok=True)
     stem = f"{arch.replace('/', '_')}__{shape_name}"
     if save_hlo:
@@ -232,6 +233,8 @@ def main():
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "blockwise", "blockwise_cv",
                              "blockwise_hp"])
+    ap.add_argument("--out-dir", default=ART,
+                    help="artifact root (default: <repo>/artifacts/dryrun)")
     args = ap.parse_args()
 
     combos = []
@@ -252,7 +255,8 @@ def main():
                               train_layout=args.train_layout,
                               fed_bf16=args.fed_bf16,
                               microbatches=args.microbatch,
-                              attn_impl=args.attn_impl)
+                              attn_impl=args.attn_impl,
+                              art_dir=args.out_dir)
             flops = rec.get("cost", {}).get("flops", float("nan"))
             temp = rec.get("memory", {}).get("temp_size_in_bytes", -1)
             print(f"OK   {arch:24s} {shape:12s} mesh={rec['mesh']}"

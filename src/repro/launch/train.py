@@ -50,10 +50,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import check_fingerprint
 from repro.checkpoint import metadata as ckpt_metadata
 from repro.checkpoint import restore, save
 from repro.core import (aggregation, client_batch, comm, compress, sampling,
                         tri_lora)
+from repro.core import client_store as client_store_lib
 from repro.core.similarity import cka
 from repro.data import synthetic
 from repro.models import model
@@ -70,13 +72,24 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         straggler_frac: float = 0.0, engine: str = "eager",
         chunk_rounds: int = 8, resume: bool = False,
         uplink_codec: str = "none", scan_donate: bool = True,
-        scan_prefetch: bool = True) -> dict:
+        scan_prefetch: bool = True, client_store: str = "device") -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
     assert engine in ("eager", "scan"), engine
     vectorized = client_parallelism == "vmap"
     if engine == "scan" and not vectorized:
         raise ValueError("engine='scan' runs on the stacked client axis; "
                          "use client_parallelism='vmap'")
+    if client_store not in client_store_lib.STORE_BACKENDS:
+        raise ValueError(f"client_store={client_store!r}; expected one of "
+                         f"{client_store_lib.STORE_BACKENDS}")
+    if client_store != "device" and not vectorized:
+        raise ValueError(f"client_store={client_store!r} requires "
+                         f"client_parallelism='vmap'")
+    if client_store == "host" and engine != "eager":
+        raise ValueError("the LM driver's host-backed store runs eager "
+                         "rounds only (cohort gather/write-back per round); "
+                         "use --engine eager or client_store="
+                         "'device'/'sharded'")
     if resume and engine != "scan":
         raise ValueError("--resume requires --engine scan (the eager "
                          "driver does not write resumable state)")
@@ -128,7 +141,16 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         return adapter, losses
 
     local_fit = jax.jit(jax.vmap(_local_fit) if vectorized else _local_fit)
-    stacked = client_batch.stack_states(adapters) if vectorized else None
+    stacked = None
+    if vectorized and client_store != "host":
+        stacked = client_batch.stack_states(adapters)
+        if client_store == "sharded":
+            # client axis over the device mesh (DESIGN.md §12): the same
+            # stacked programs run under GSPMD with each device owning an
+            # m/d row block
+            from repro.launch import mesh as mesh_lib
+            stacked = mesh_lib.shard_clients(
+                mesh_lib.make_client_mesh(clients), stacked)
 
     def _draw(i):
         bs = [next(iters[i]) for _ in range(local_steps)]
@@ -148,6 +170,19 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
               if partial else sampling.full_plan(clients, rnd))
              for rnd in range(rounds)]
 
+    if client_store == "host":
+        history, adapters = _run_host_lm(
+            local_fit=local_fit, draw=_draw, adapters=adapters, plans=plans,
+            method=method, clients=clients, seed=seed, codec=codec,
+            compressed=compressed, payload_of=payload_of, verbose=verbose)
+        if ckpt:
+            save(ckpt, {"adapter_client0": adapters[0]},
+                 metadata={"arch": arch, "rounds": rounds, "method": method})
+            if verbose:
+                print(f"saved adapter checkpoint -> {ckpt}")
+        return {"history": history, "adapters": adapters, "cfg": cfg,
+                "base": base}
+
     if engine == "scan":
         history, adapters = _run_scan_lm(
             cfg=cfg, local_fit_raw=_local_fit, draw=_draw,
@@ -155,7 +190,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             rounds=rounds, chunk_rounds=chunk_rounds, seed=seed,
             ckpt=ckpt, resume=resume, verbose=verbose,
             codec=codec, compressed=compressed, payload_of=payload_of,
-            donate=scan_donate, prefetch=scan_prefetch)
+            donate=scan_donate, prefetch=scan_prefetch,
+            client_store=client_store)
         return {"history": history, "adapters": adapters, "cfg": cfg,
                 "base": base}
 
@@ -281,11 +317,111 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
             "base": base}
 
 
+def _run_host_lm(*, local_fit, draw, adapters, plans, method: str,
+                 clients: int, seed: int, codec, compressed: bool,
+                 payload_of, verbose: bool):
+    """Host-backed LM rounds (``--client-store host``): the m adapters live
+    in host numpy (:class:`repro.core.client_store.HostClientStore`); each
+    round gathers only the sampled cohort to the device, fits, aggregates
+    over the cohort, and writes back.  For CE-LoRA a device-resident all-m
+    bank of the r×r C payloads (plus its EF residual when compressed)
+    backs the full pairwise CKA — the full adapters never stack on device.
+    Produces the identical history as the stacked eager driver (equality
+    asserted in tests/test_client_store.py)."""
+    store = client_store_lib.HostClientStore(adapters)
+    bank = ef_bank = None            # celora: all-m C payload (+ EF) bank
+    ef_pop = None                    # fedavg compressed: host EF residuals
+    if method == "celora":
+        bank = jax.tree.map(jnp.asarray, payload_of(store.population))
+        if compressed:
+            ef_bank = compress.init_ef(bank)
+    elif method == "fedavg" and compressed:
+        ef_pop = jax.tree.map(lambda l: np.zeros(l.shape, np.float32),
+                              payload_of(store.population))
+
+    history = []
+    for rnd, plan in enumerate(plans):
+        t0 = time.time()
+        drawn = [draw(i) for i in range(clients)]   # all: rng parity
+        cids = plan.sampled
+        toks = jnp.asarray(np.stack([drawn[i][0] for i in cids]))
+        labs = jnp.asarray(np.stack([drawn[i][1] for i in cids]))
+        cohort = store.gather(cids)
+        cohort, ls = local_fit(cohort, toks, labs)
+        losses = [float(l) for l in np.asarray(ls[:, -1])]
+        pml = jnp.asarray(plan.cohort_mask())
+        pmf = jnp.asarray(plan.mask(clients))
+        cdev = jnp.asarray(cids.astype(np.int32))
+        payload = payload_of(cohort)
+        rc = comm.RoundComm.zero()
+        if method == "celora":
+            # fresh cohort Cs join the all-m bank before encode/CKA; the
+            # bank is re-scattered after install so its rows stay "each
+            # client's current C"
+            bank = client_batch.scatter_clients(bank, cdev, payload)
+            if compressed:
+                enc, served_all, ef_all = compress.encode_stacked(
+                    codec, bank, ef_bank,
+                    compress.client_keys(seed, rnd, clients))
+                ef_bank = client_batch.select_clients(pmf, ef_all, ef_bank)
+                rc = comm.round_comm_compressed_stacked(
+                    enc, bank, plan.n_participants)
+            else:
+                served_all = bank
+                rc = comm.round_comm_stacked(bank, plan.n_participants)
+            s_model = cka.pairwise_model_similarity_stacked(
+                served_all, jax.random.key(seed + 99), 32)
+            w = aggregation.personalized_weights(s_model, participants=pmf)
+            # participants ⊆ cohort ⇒ nonzero columns all index cohort rows
+            mixed = aggregation.aggregate_stacked(
+                client_batch.gather_clients(served_all, cdev),
+                w[cdev[:, None], cdev[None, :]])
+            cohort = client_batch.select_clients(
+                pml, tri_lora.tree_load_payload(cohort, mixed), cohort)
+            bank = client_batch.scatter_clients(bank, cdev,
+                                                payload_of(cohort))
+        elif method == "fedavg":
+            if compressed:
+                keys = jax.vmap(
+                    lambda i: compress.client_key(seed, rnd, i))(cdev)
+                ef_c = client_batch.gather_clients(
+                    jax.tree.map(jnp.asarray, ef_pop), cdev)
+                enc, served, ef_new = compress.encode_stacked(
+                    codec, payload, ef_c, keys)
+                rc = comm.round_comm_compressed_stacked(
+                    enc, payload, plan.n_participants)
+                ef_c = client_batch.select_clients(pml, ef_new, ef_c)
+                jax.tree.map(
+                    lambda l, v: l.__setitem__(cids, np.asarray(v)),
+                    ef_pop, ef_c)
+            else:
+                served = payload
+                rc = comm.round_comm_stacked(payload, plan.n_participants)
+            g = aggregation.fedavg_stacked(served, jnp.ones(len(cids)), pml)
+            cohort = client_batch.select_clients(
+                pml, client_batch.broadcast_to_clients(g, len(cids)), cohort)
+        store.scatter(cids, cohort)
+        rec = {"round": rnd, "loss": float(np.mean(losses)),
+               "uplink_floats": rc.uplink_elems,
+               "uplink_bytes": rc.uplink_bytes,
+               "downlink_bytes": rc.downlink_bytes,
+               "participants": plan.participants.tolist(),
+               "wall_s": time.time() - t0}
+        history.append(rec)
+        if verbose:
+            print(f"round {rnd:3d}  loss {rec['loss']:.4f}  "
+                  f"uplink {rc.uplink_bytes}B "
+                  f"({plan.n_participants}/{clients} clients)  "
+                  f"{rec['wall_s']:.1f}s", flush=True)
+    return history, store.unstack()
+
+
 def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                  clients: int, rounds: int, chunk_rounds: int, seed: int,
                  ckpt: str | None, resume: bool, verbose: bool,
                  codec=None, compressed: bool = False, payload_of=None,
-                 donate: bool = True, prefetch: bool = True):
+                 donate: bool = True, prefetch: bool = True,
+                 client_store: str = "device"):
     """Compiled LM rounds: one jitted ``lax.scan`` dispatch per chunk of
     rounds (mirrors :mod:`repro.core.fed_engine` for the classification
     runtime; DESIGN.md §9).  Checkpoints the full stacked adapter state at
@@ -365,16 +501,15 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
         if "rounds_done" not in meta:
             raise ValueError(f"{ckpt!r} is not a scan-engine checkpoint "
                              f"(no rounds_done in metadata)")
-        # uplink_codec is part of the fingerprint: the stored EF residual is
-        # meaningful only under the codec that produced it
-        want = {"arch": cfg.name, "method": method, "clients": clients,
-                "seed": seed, "uplink_codec": codec.name}
-        meta.setdefault("uplink_codec", "none")   # pre-codec checkpoints
-        stale = {k: (meta.get(k), v) for k, v in want.items()
-                 if meta.get(k) != v}
-        if stale:
-            raise ValueError(f"checkpoint {ckpt!r} was written by a "
-                             f"different run configuration: {stale}")
+        # uplink_codec is part of the fingerprint (the stored EF residual
+        # is meaningful only under the codec that produced it); so is the
+        # store backend, backfilled to "device" for pre-§12 checkpoints
+        check_fingerprint(
+            ckpt, meta,
+            {"arch": cfg.name, "method": method, "clients": clients,
+             "seed": seed, "uplink_codec": codec.name,
+             "client_store": client_store},
+            defaults={"uplink_codec": "none", "client_store": "device"})
         start = int(meta["rounds_done"])
         if start > rounds:
             raise ValueError(f"checkpoint has {start} completed rounds but "
@@ -422,7 +557,8 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                  metadata={"rounds_done": c1, "arch": cfg.name,
                            "method": method, "engine": "scan",
                            "clients": clients, "seed": seed,
-                           "uplink_codec": codec.name})
+                           "uplink_codec": codec.name,
+                           "client_store": client_store})
         if verbose:
             print(f"rounds {c0:3d}–{c1 - 1:3d}  loss "
                   f"{hist_loss[-1]:.4f}  ({wall_s:.1f}s/round)", flush=True)
@@ -482,6 +618,12 @@ def main():
     ap.add_argument("--no-prefetch", action="store_true",
                     help="scan engine: disable overlapped chunk prefetch "
                          "(DESIGN.md §11)")
+    ap.add_argument("--client-store", default="device",
+                    choices=["device", "sharded", "host"],
+                    help="population residency (DESIGN.md §12): device-"
+                         "resident stack, client axis sharded over the "
+                         "device mesh, or host-resident with per-round "
+                         "cohort gather/write-back")
     args = ap.parse_args()
     out = run(arch=args.arch, clients=args.clients, rounds=args.rounds,
               local_steps=args.local_steps, batch=args.batch, seq=args.seq,
@@ -493,7 +635,8 @@ def main():
               chunk_rounds=args.chunk_rounds, resume=args.resume,
               uplink_codec=args.uplink_codec,
               scan_donate=not args.no_donate,
-              scan_prefetch=not args.no_prefetch)
+              scan_prefetch=not args.no_prefetch,
+              client_store=args.client_store)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

@@ -114,3 +114,88 @@ def test_metadata_missing_is_empty(tmp_path):
     path = str(tmp_path / "s.npz")
     ckpt.save(path, {"w": jnp.zeros((4,))})
     assert ckpt.metadata(path) == {}
+
+
+def test_restore_as_numpy_keeps_host_arrays(tmp_path):
+    """restore(as_numpy=True) — the host-backed ClientStore's resume path —
+    must return numpy leaves (no device transfer) with the like-tree's
+    dtypes, bit-identical to the device restore."""
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "h": jnp.ones((3, 2), jnp.bfloat16),
+            "n": np.arange(3, dtype=np.int32)}
+    path = str(tmp_path / "np.npz")
+    ckpt.save(path, tree)
+    out = ckpt.restore(path, jax.tree.map(np.zeros_like, tree),
+                       as_numpy=True)
+    for leaf, ref in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert isinstance(leaf, np.ndarray)
+        assert leaf.dtype == np.asarray(ref).dtype
+        np.testing.assert_array_equal(leaf, np.asarray(ref))
+
+
+def test_check_fingerprint_mismatch_raises():
+    meta = {"arch": "tiny", "seed": 0, "rounds": 4}
+    ckpt.check_fingerprint("x.npz", dict(meta), dict(meta))   # identical: ok
+    with pytest.raises(ValueError, match="different run configuration"):
+        ckpt.check_fingerprint("x.npz", dict(meta),
+                               dict(meta, seed=1))
+    # ignored fields may differ (resume extends rounds)
+    ckpt.check_fingerprint("x.npz", dict(meta), dict(meta, rounds=8),
+                           ignore=("rounds",))
+
+
+def test_check_fingerprint_backfills_defaults():
+    """Fields added to the fingerprint after a checkpoint was written —
+    uplink_codec (§10), eval_every (§11), client_store (§12) — must be
+    backfilled with their pre-feature defaults, so old checkpoints resume
+    under the default config but are refused under a non-default one."""
+    old_meta = {"arch": "tiny", "seed": 0}          # pre-§12: no store field
+    want = {"arch": "tiny", "seed": 0, "client_store": "device"}
+    ckpt.check_fingerprint("x.npz", dict(old_meta), want,
+                           defaults={"client_store": "device"})
+    with pytest.raises(ValueError, match="client_store"):
+        ckpt.check_fingerprint("x.npz", dict(old_meta),
+                               dict(want, client_store="host"),
+                               defaults={"client_store": "device"})
+
+
+def test_resume_accepts_pre_store_checkpoint(tmp_path, tiny_cfg):
+    """Integration: a scan-engine checkpoint whose metadata predates the
+    client_store fingerprint field (doctored out, simulating a pre-§12
+    file) must resume under client_store='device' and be refused under
+    'host'."""
+    from repro.core.fed_model import FedTask
+    from repro.core.federated import FedConfig, run_federated
+    from repro.data import synthetic
+
+    n_classes, seq, m = 4, 16, 2
+    tr = synthetic.make_classification_data(0, 200, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    half = len(tr.labels) // 2
+    ctrain = [{"tokens": tr.tokens[:half], "labels": tr.labels[:half]},
+              {"tokens": tr.tokens[half:], "labels": tr.labels[half:]}]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+
+    def fed(rounds, store="device", resume=False):
+        return FedConfig(method="fedpetuning", n_clients=m, rounds=rounds,
+                         local_steps=2, batch_size=8, lr=1e-2, seed=0,
+                         engine="scan", chunk_rounds=2, client_store=store,
+                         checkpoint_path=path, resume=resume)
+
+    path = str(tmp_path / "old.npz")
+    run_federated(task, fed(2), ctrain, ctrain)
+    meta = ckpt.metadata(path)
+    assert meta.pop("client_store") == "device"     # field exists today …
+    with np.load(path) as z:                        # … doctor it out
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    import json
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), np.uint8).copy()
+    np.savez(path.removesuffix(".npz"), **arrays)
+
+    assert "client_store" not in ckpt.metadata(path)
+    out = run_federated(task, fed(4, resume=True), ctrain, ctrain)
+    assert len(out["history"]) == 4
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_federated(task, fed(4, store="host", resume=True),
+                      ctrain, ctrain)
