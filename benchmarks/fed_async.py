@@ -1,0 +1,208 @@
+"""Round-throughput: asynchronous buffered vs synchronous federated engine
+(DESIGN.md §13).
+
+The synchronous engines pay one cohort-max latency per round: nothing
+aggregates until the slowest sampled client reports, so under a
+heavy-tailed device population (lognormal latency) the tail sets the
+clock.  The async engine flushes every ``buffer_size`` arrivals and
+re-dispatches flushed clients immediately; with ``async_concurrency`` at
+2x the cohort it keeps the NEXT waves' idle clients in flight while the
+current wave's stragglers run, so each flush waits for the fastest
+``buffer_size`` of ~2x that many in-flight uploads instead of the cohort
+max.  Buffer = cohort size keeps per-flush progress comparable to a sync
+round (same aggregate fan-in), which is what makes the rounds-to-target
+bound below meaningful.
+
+Both engines run the SAME seeded latency model, so the comparison is in
+deterministic virtual time, not host wall time: the async runtime reports
+its own virtual clock (``sim_times``), and the synchronous baseline's
+virtual duration is computed arithmetically as sum over rounds of the
+cohort-max of the per-(wave, client) draws the async scheduler would make
+— no second latency mechanism, no noise.
+
+An async "round" aggregates ``buffer_size`` (< cohort) uploads, so raw
+round-throughput alone would overstate progress; the benchmark therefore
+also checks QUALITY: the stale-weighted async run must reach the sync
+run's target mean accuracy within 1.2x the rounds sync needed.
+
+Usage:  PYTHONPATH=src python benchmarks/fed_async.py [--quick] [--json F]
+
+Prints CSV (engine,rounds,virtual_s,rounds_per_virtual_s,mean_acc) plus
+the speedup; the full (non ``--quick``) run asserts speedup >= 1.3x at
+m = 50 AND the rounds-to-target bound.  ``--smoke`` runs the CI-sized
+zero-staleness equivalence check (async == scan histories) and writes a
+JSON artifact (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from fed_scan import bench_setup  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+from repro.core.sampling import LatencyModel  # noqa: E402
+
+SPEEDUP_FLOOR = 1.3      # async vs sync round-throughput, virtual time
+ROUNDS_TO_TARGET_MAX = 1.2   # async may need at most 1.2x sync's rounds
+SEED = 0
+
+# the measured regime: heavy-tailed lognormal devices, buffer = cohort,
+# concurrency = 2x cohort (wave overlap)
+LATENCY = dict(latency="lognormal", latency_scale=1.0, latency_sigma=1.0)
+
+
+def _common(m: int, rounds: int, participation: float) -> dict:
+    return dict(method="celora", n_clients=m, rounds=rounds, local_steps=1,
+                batch_size=2, lr=1e-2, seed=SEED,
+                participation=participation, straggler_frac=0.0,
+                use_data_sim=False, cka_probes=8, client_parallelism="vmap",
+                client_store="device")
+
+
+def run_sync(task, ctrain, ctest, *, m, rounds, participation) -> dict:
+    fed = FedConfig(engine="scan", chunk_rounds=min(5, rounds),
+                    **_common(m, rounds, participation))
+    out = run_federated(task, fed, ctrain, ctest)
+    # the sync baseline's virtual duration: each round blocks on the max
+    # latency of its sampled cohort, under the SAME (seed, wave, client)
+    # draws the async scheduler uses.
+    lm = LatencyModel(LATENCY["latency"], LATENCY["latency_scale"],
+                      LATENCY["latency_sigma"])
+    virtual = 0.0
+    for rec in out["history"]:
+        draws = lm.draw(m, rec.round, SEED)
+        virtual += float(max(draws[c] for c in rec.sampled))
+    return _summ(out, rounds, virtual)
+
+
+def run_async(task, ctrain, ctest, *, m, rounds, participation,
+              buffer_size, concurrency, staleness_decay) -> dict:
+    fed = FedConfig(engine="async", buffer_size=buffer_size,
+                    async_concurrency=concurrency,
+                    staleness_decay=staleness_decay,
+                    **_common(m, rounds, participation), **LATENCY)
+    out = run_federated(task, fed, ctrain, ctest)
+    summ = _summ(out, rounds, out["sim_times"][-1])
+    summ["staleness_mean"] = float(np.mean(out["staleness_mean"]))
+    return summ
+
+
+def _summ(out: dict, rounds: int, virtual_s: float) -> dict:
+    return {"rounds": rounds, "virtual_s": virtual_s,
+            "rounds_per_virtual_s": rounds / virtual_s,
+            "mean_acc": float(out["mean_acc"]),
+            "acc_history": [float(np.mean(r.accs)) for r in out["history"]],
+            "loss_history": [float(r.train_loss) for r in out["history"]]}
+
+
+def rounds_to_target(acc_history: list[float], target: float) -> int | None:
+    """1-based first round whose mean accuracy reaches ``target``."""
+    for i, a in enumerate(acc_history):
+        if a >= target:
+            return i + 1
+    return None
+
+
+def smoke(json_path: str | None) -> dict:
+    """CI smoke: the zero-staleness limit (uniform latency, buffer =
+    cohort) must reproduce the compiled scan engine's history."""
+    m, rounds = 6, 3
+    task, ctrain, ctest = bench_setup(m)
+    kw = _common(m, rounds, participation=1.0)
+    ref = run_federated(task, FedConfig(engine="scan", chunk_rounds=rounds,
+                                        **kw), ctrain, ctest)
+    out = run_federated(task, FedConfig(engine="async", **kw),
+                        ctrain, ctest)
+    np.testing.assert_allclose(
+        [r.train_loss for r in out["history"]],
+        [r.train_loss for r in ref["history"]], atol=1e-5)
+    np.testing.assert_allclose(out["mean_acc"], ref["mean_acc"], atol=1e-3)
+    assert all(s == 0.0 for s in out["staleness_mean"])
+    print(f"# fed_async --smoke: zero-staleness async history allclose to "
+          f"scan ({rounds} rounds, m={m}, buffer=cohort, uniform latency)")
+    report = {"mode": "smoke", "m": m, "rounds": rounds,
+              "scan_loss": [float(r.train_loss) for r in ref["history"]],
+              "async_loss": [float(r.train_loss) for r in out["history"]],
+              "mean_acc": float(out["mean_acc"])}
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {json_path}")
+    return report
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="F")
+    a = ap.parse_args(argv)
+    if a.smoke:
+        return smoke(a.json)
+
+    m = 12 if a.quick else 50
+    rounds = 6 if a.quick else 12
+    participation = 0.5 if a.quick else 0.4
+    k = int(participation * m)
+    buffer_size, concurrency = k, 2 * k
+    async_rounds = math.ceil(ROUNDS_TO_TARGET_MAX * rounds)
+    decay = 0.9
+    task, ctrain, ctest = bench_setup(m)
+
+    print(f"# fed_async — §13 buffered async vs sync scan, m={m}, "
+          f"cohort={k}, buffer={buffer_size}, concurrency={concurrency}, "
+          f"decay={decay}, lognormal(sigma={LATENCY['latency_sigma']}), "
+          f"virtual time")
+    sync = run_sync(task, ctrain, ctest, m=m, rounds=rounds,
+                    participation=participation)
+    asyn = run_async(task, ctrain, ctest, m=m, rounds=async_rounds,
+                     participation=participation, buffer_size=buffer_size,
+                     concurrency=concurrency, staleness_decay=decay)
+
+    speedup = asyn["rounds_per_virtual_s"] / sync["rounds_per_virtual_s"]
+    target = 0.98 * max(sync["acc_history"])
+    rtt_sync = rounds_to_target(sync["acc_history"], target)
+    rtt_async = rounds_to_target(asyn["acc_history"], target)
+
+    print("engine,rounds,virtual_s,rounds_per_virtual_s,mean_acc")
+    for name, r in (("sync", sync), ("async", asyn)):
+        print(f"{name},{r['rounds']},{r['virtual_s']:.2f},"
+              f"{r['rounds_per_virtual_s']:.3f},{r['mean_acc']:.4f}")
+    print(f"# speedup: {speedup:.2f}x  (floor {SPEEDUP_FLOOR}x)")
+    print(f"# rounds to target acc {target:.4f}: sync={rtt_sync} "
+          f"async={rtt_async} (bound {ROUNDS_TO_TARGET_MAX}x)")
+    print(f"# async mean staleness: {asyn['staleness_mean']:.2f}")
+
+    report = {"m": m, "cohort": k, "buffer_size": buffer_size,
+              "concurrency": concurrency,
+              "staleness_decay": decay, "latency": LATENCY,
+              "speedup": speedup, "target_acc": target,
+              "rounds_to_target": {"sync": rtt_sync, "async": rtt_async},
+              "sync": sync, "async": asyn}
+    if a.json:
+        slim = {kk: {k2: v2 for k2, v2 in vv.items() if k2 != "loss_history"}
+                if isinstance(vv, dict) else vv for kk, vv in report.items()}
+        Path(a.json).write_text(json.dumps(slim, indent=2))
+        print(f"# wrote {a.json}")
+    if not a.quick:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"async round-throughput speedup {speedup:.2f}x below the "
+            f"{SPEEDUP_FLOOR}x floor")
+        assert rtt_sync is not None and rtt_async is not None, (
+            f"target accuracy {target:.4f} not reached "
+            f"(sync={rtt_sync}, async={rtt_async})")
+        assert rtt_async <= ROUNDS_TO_TARGET_MAX * rtt_sync, (
+            f"async needed {rtt_async} rounds to target vs sync {rtt_sync} "
+            f"(> {ROUNDS_TO_TARGET_MAX}x)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

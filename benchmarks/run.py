@@ -38,6 +38,7 @@ BENCHES = {}
 
 def _register():
     import beyond_selfweight
+    import fed_async
     import fed_cohort
     import fed_comm
     import fed_compress
@@ -77,6 +78,8 @@ def _register():
             lambda quick: fed_pipeline.main(["--quick"] if quick else []),
         "fed_compress":                           # uplink codec sweep (ours)
             lambda quick: fed_compress.main(["--quick"] if quick else []),
+        "fed_async":                              # §13 async buffered (ours)
+            lambda quick: fed_async.main(["--smoke"] if quick else []),
         "roofline": _roofline,                    # §Roofline (ours)
     })
 

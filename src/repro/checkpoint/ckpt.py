@@ -115,6 +115,35 @@ def restore(path: str, like: Any, *, as_numpy: bool = False) -> Any:
         return jax.tree.unflatten(treedef, leaves)
 
 
+def load_subtree(path: str, prefix: str) -> Any:
+    """Load the stored subtree under slash-joined ``prefix`` as a nested
+    dict of host numpy arrays, WITHOUT a template.
+
+    :func:`restore` validates against a ``like`` tree, which requires the
+    caller to already know every leaf's shape — impossible for state whose
+    extent is data-dependent, e.g. the async engine's in-flight record
+    table (``n_pending`` varies with where the run was killed, DESIGN.md
+    §13).  Nested structure is rebuilt from the key paths; keys come back
+    as strings (list/tuple indices included).  Returns ``{}`` when nothing
+    is stored under the prefix."""
+    out: dict = {}
+    pre = prefix.rstrip("/") + "/"
+    with np.load(path) as data:
+        dtypes = json.loads(bytes(data["__dtypes__"]).decode())
+        for key in data.files:
+            if key.startswith("__") or not key.startswith(pre):
+                continue
+            arr = data[key]
+            if dtypes[key] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            node = out
+            parts = key[len(pre):].split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = np.asarray(arr)
+    return out
+
+
 def metadata(path: str) -> dict:
     with np.load(path) as data:
         if "__meta__" in data:

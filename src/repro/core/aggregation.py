@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 def personalized_weights(similarity: jnp.ndarray,
                          self_weight: float = 0.0,
-                         participants: Optional[jnp.ndarray] = None
+                         participants: Optional[jnp.ndarray] = None,
+                         col_scale: Optional[jnp.ndarray] = None
                          ) -> jnp.ndarray:
     """similarity: (m, m), symmetric, higher = more similar.
     Returns row-stochastic W (m, m): W[i] are client i's aggregation weights.
@@ -50,6 +51,11 @@ def personalized_weights(similarity: jnp.ndarray,
     uplinked a C this round — and each row renormalizes over those columns.
     Rows of absent clients are still well-formed but unused (the runtime
     installs downlinks to participants only).
+
+    ``col_scale`` (optional (m,) float, async engine): per-contributor
+    discount multiplied into the columns BEFORE row normalization — the
+    staleness weighting of DESIGN.md §13 (``decay**staleness``).  ``None``
+    leaves eqn (3) bit-identical to the synchronous path.
 
     Degenerate rows — all eligible similarities ≤ 0 (so eqn (3)'s
     denominator vanishes) — fall back to UNIFORM over the eligible others
@@ -67,6 +73,8 @@ def personalized_weights(similarity: jnp.ndarray,
         pmask = jnp.asarray(participants, bool)
         s = jnp.where(pmask[None, :], s, 0.0)
         eligible = eligible & pmask[None, :]
+    if col_scale is not None:
+        s = s * jnp.asarray(col_scale, s.dtype)[None, :]
     denom = jnp.sum(s, axis=1, keepdims=True)
     n_elig = jnp.sum(eligible, axis=1, keepdims=True)
     uniform = eligible.astype(s.dtype) / jnp.maximum(n_elig, 1).astype(s.dtype)
@@ -96,7 +104,8 @@ def aggregate_payloads(payloads: Sequence[Any], weights: jnp.ndarray) -> list:
 
 
 def fedavg_stacked(stacked: Any, sample_counts: Sequence[int],
-                   participants: Optional[jnp.ndarray] = None) -> Any:
+                   participants: Optional[jnp.ndarray] = None,
+                   col_scale: Optional[jnp.ndarray] = None) -> Any:
     """FedAvg over a STACKED payload: leaves (m, …) → ONE global pytree
     (sample-count weighted mean over the client axis).
 
@@ -105,6 +114,10 @@ def fedavg_stacked(stacked: Any, sample_counts: Sequence[int],
     identical to averaging the participant subset, while keeping the fused
     full-m einsum (absent terms contribute exact zeros).
 
+    ``col_scale`` (optional (m,) float, async engine): staleness discount
+    multiplied into each contributor's count before normalization
+    (DESIGN.md §13); ``None`` is bit-identical to the synchronous mean.
+
     If every eligible count is zero (a round that sampled only empty-shard
     clients), the mean degrades to UNIFORM over the eligible clients rather
     than 0/0 = NaN wiping the payload."""
@@ -112,6 +125,8 @@ def fedavg_stacked(stacked: Any, sample_counts: Sequence[int],
     elig = (jnp.ones_like(n) if participants is None
             else jnp.asarray(participants, jnp.float32))
     n = n * elig
+    if col_scale is not None:
+        n = n * jnp.asarray(col_scale, n.dtype)
     tot = jnp.sum(n)
     uniform = elig / jnp.maximum(jnp.sum(elig), 1.0)
     w = jnp.where(tot > 0, n / jnp.where(tot > 0, tot, 1.0), uniform)

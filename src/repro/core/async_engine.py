@@ -1,0 +1,648 @@
+"""Asynchronous buffered federated engine: ``FedConfig.engine="async"``.
+
+Both synchronous engines (eager / scan) advance in lockstep rounds: the
+server waits for the whole cohort before aggregating, so one slow client
+stalls everyone (the straggler drop mask of DESIGN.md §8 merely discards
+the slow work).  This engine replaces the barrier with a FedBuff-style
+buffered server (DESIGN.md §13):
+
+* **Dispatch** — clients are handed work in plan order (the same
+  :mod:`repro.core.sampling` plans the sync engines consume, wave-major /
+  client-minor), up to ``FedConfig.async_concurrency`` in flight at once.
+  A client never holds two assignments: its wave-t+1 item is deferred
+  (FIFO) until its wave-t upload has been flushed.
+* **Arrival** — each dispatch draws a virtual-time latency from the
+  seeded :class:`repro.core.sampling.LatencyModel`; arrivals are replayed
+  from a min-heap keyed ``(arrival_time, dispatch_seq)``, so the whole
+  interleaving is a pure function of ``(seed, config)`` — no threads, no
+  wall clock, bit-for-bit reproducible.
+* **Flush** — every ``FedConfig.buffer_size`` (= K) arrivals the server
+  aggregates the buffered uploads into the current global state.  Each
+  contribution is discounted by ``staleness_decay ** staleness``, where
+  staleness counts the flushes that happened since the contribution was
+  dispatched; the discount enters eqn-(3) personalized weights as a
+  column scale before row normalization, and FedAvg's effective sample
+  counts directly (:mod:`repro.core.aggregation`).  One flush = one
+  ``RoundRecord``.
+
+Equivalence contract (asserted in tests/test_async_engine.py): in the
+zero-staleness limit — uniform latency, ``buffer_size = cohort size``,
+``staleness_decay`` irrelevant because every staleness is 0 — the whole
+cohort arrives at one instant, every flush is exactly one sync round, and
+the engine reproduces the sync engines' loss/accuracy/byte histories.
+That holds across strategies and all four uplink codecs; under partial
+participation it holds for the uncompressed wire (the sync engines
+re-quantize ALL m rows each round for the CKA refresh, while this engine
+only ever quantizes what a client actually uploads — the async semantics
+keep non-contributor Cs at full precision).
+
+Error feedback under compression (DESIGN.md §10) is per-client state:
+the residual advances at upload-encode time inside the client's own
+dispatch, so out-of-order arrival cannot cross client streams.
+
+Checkpoint/resume: at flush boundaries (``chunk_rounds`` cadence) the
+full engine state — stacked client states, S^model, history, per-client
+data-stream positions, the arrival clock, and the in-flight record table
+(including already-encoded uploads) — is written atomically via
+:mod:`repro.checkpoint.ckpt`.  A resumed run replays the identical event
+sequence: the heap is rebuilt from stored float64 arrival times, the
+dispatch cursor and deferral queue are restored exactly, and loaders are
+fast-forwarded per client (:meth:`repro.data.pipeline.Loader.skip`), so
+the continued history is the uninterrupted one bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import time
+import warnings
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import (aggregation, client_batch, client_store, comm,
+                        compress, sampling, tri_lora)
+from repro.core.fed_engine import _fingerprint
+from repro.core.jit_cache import JitCache
+from repro.core.similarity import cka
+
+_FIT_CACHE = JitCache(maxsize=32)
+_FLUSH_CACHE = JitCache(maxsize=16)
+_EVAL_CACHE = JitCache(maxsize=16)
+
+
+def async_fingerprint(fed, buffer_size: int, concurrency: int) -> dict:
+    """Scan fingerprint + the async knobs (resolved, so ``0`` and an
+    explicit cohort size interchange)."""
+    return dict(_fingerprint(fed), buffer_size=buffer_size,
+                async_concurrency=concurrency,
+                staleness_decay=fed.staleness_decay, latency=fed.latency,
+                latency_scale=fed.latency_scale,
+                latency_sigma=fed.latency_sigma)
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One dispatched local-fit assignment in flight (host bookkeeping)."""
+    seq: int          # global dispatch sequence number (heap tie-break)
+    client: int
+    wave: int         # plan wave = the client's data-stream session index
+    version: int      # aggregate version served at dispatch (staleness base)
+    arrival: float    # virtual arrival time
+    loss: float = 0.0
+    upload: Any = None  # served (dequantized) uplink rows, filled at fit
+
+
+class AsyncScheduler:
+    """Deterministic virtual-time event loop (pure host bookkeeping).
+
+    ``fit_group(records)`` is called at dispatch time and must fill each
+    record's ``loss``/``upload``; ``flush_cb(records, flush_idx,
+    sim_now)`` is called once per flush AFTER the scheduler has already
+    advanced (version bumped, contributors freed), so a checkpoint
+    written inside the callback captures exactly the state a resumed run
+    must re-enter at.
+    """
+
+    def __init__(self, *, waves: Sequence[np.ndarray], m: int,
+                 latency: sampling.LatencyModel, seed: int,
+                 buffer_size: int, concurrency: int, rounds: int,
+                 fit_group: Callable, flush_cb: Callable):
+        self.waves = waves
+        self.m = m
+        self.latency = latency
+        self.seed = seed
+        self.buffer_size = buffer_size
+        self.concurrency = concurrency
+        self.rounds = rounds
+        self.fit_group = fit_group
+        self.flush_cb = flush_cb
+
+        self.heap: list = []            # (arrival, seq)
+        self.by_seq: dict = {}          # seq -> Arrival (un-flushed records)
+        self.buffer: list = []          # arrived, awaiting flush
+        self.deferred: list = []        # (wave, client) FIFO, client was busy
+        self._deferred_clients: dict = {}   # client -> #items in deferred
+        self.busy: set = set()          # clients with an un-flushed record
+        self.in_flight = 0              # dispatched, not yet arrived
+        self.wc = 0                     # stream cursor: wave index
+        self.wi = 0                     # stream cursor: index inside wave
+        self.sim_now = 0.0
+        self.next_seq = 0
+        self.version = 0                # completed flushes
+
+        self._lat_cache: dict = {}
+
+    # ------------------------------------------------------------- dispatch
+    def _latency_of(self, wave: int, client: int) -> float:
+        if wave not in self._lat_cache:
+            self._lat_cache[wave] = self.latency.draw(self.m, wave, self.seed)
+        return float(self._lat_cache[wave][client])
+
+    def _pop_dispatchable(self) -> Optional[tuple]:
+        """Next (wave, client) eligible for dispatch: the oldest deferred
+        item whose client is free, else the next stream item — deferring
+        stream items whose client is busy OR already has an earlier item
+        deferred (per-client wave order must never invert)."""
+        for idx, (w, c) in enumerate(self.deferred):
+            if c not in self.busy:
+                self.deferred.pop(idx)
+                n = self._deferred_clients[c] - 1
+                if n:
+                    self._deferred_clients[c] = n
+                else:
+                    del self._deferred_clients[c]
+                return (w, c)
+        while self.wc < len(self.waves):
+            wave = self.waves[self.wc]
+            if self.wi >= len(wave):
+                self.wc += 1
+                self.wi = 0
+                continue
+            c = int(wave[self.wi])
+            w = self.wc
+            self.wi += 1
+            if c in self.busy or c in self._deferred_clients:
+                self.deferred.append((w, c))
+                self._deferred_clients[c] = \
+                    self._deferred_clients.get(c, 0) + 1
+                continue
+            return (w, c)
+        return None
+
+    def _refill(self) -> None:
+        group = []
+        while self.in_flight + len(group) < self.concurrency:
+            item = self._pop_dispatchable()
+            if item is None:
+                break
+            group.append(item)
+            self.busy.add(item[1])   # so its next wave defers, not re-pops
+        if group:
+            self._dispatch(group)
+
+    def _dispatch(self, items: list) -> None:
+        recs = []
+        for w, c in items:
+            rec = Arrival(seq=self.next_seq, client=c, wave=w,
+                          version=self.version,
+                          arrival=self.sim_now + self._latency_of(w, c))
+            self.next_seq += 1
+            self.in_flight += 1
+            self.by_seq[rec.seq] = rec
+            heapq.heappush(self.heap, (rec.arrival, rec.seq))
+            recs.append(rec)
+        self.fit_group(recs)
+
+    # ---------------------------------------------------------------- flush
+    def _do_flush(self) -> None:
+        records, self.buffer = self.buffer, []
+        f = self.version
+        for r in records:
+            self.busy.discard(r.client)
+            del self.by_seq[r.seq]
+        self.version = f + 1
+        self.flush_cb(records, f, self.sim_now)
+
+    def run(self) -> None:
+        if self.version >= self.rounds:
+            return
+        self._refill()
+        while self.version < self.rounds:
+            if not self.heap:
+                if self.buffer:
+                    # starvation flush: the plan stream is exhausted and the
+                    # only undispatched records (if any) belong to clients
+                    # parked in this very buffer — flush short to free them
+                    # rather than deadlock (reachable when concurrency >
+                    # cohort lets the tail outrun the stream).
+                    self._do_flush()
+                    if self.version >= self.rounds:
+                        return
+                    self._refill()
+                    continue
+                raise RuntimeError(
+                    f"async engine deadlock: {self.version}/{self.rounds} "
+                    f"flushes done, buffer {len(self.buffer)}/"
+                    f"{self.buffer_size}, nothing in flight — the plan "
+                    f"stream cannot supply buffer_size more uploads "
+                    f"(buffer_size must be <= cohort size)")
+            t = self.heap[0][0]
+            self.sim_now = t
+            group = []
+            while self.heap and self.heap[0][0] == t:
+                _, seq = heapq.heappop(self.heap)
+                group.append(self.by_seq[seq])
+            for rec in group:
+                self.in_flight -= 1
+                self.buffer.append(rec)
+                if len(self.buffer) == self.buffer_size:
+                    self._do_flush()
+                    if self.version >= self.rounds:
+                        return
+                    # refill IMMEDIATELY: freed clients' next dispatch must
+                    # see the just-flushed aggregate (and a resumed run's
+                    # first refill replays exactly this one)
+                    self._refill()
+            self._refill()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint plumbing
+# ---------------------------------------------------------------------------
+
+def _save_async(fed, sched: AsyncScheduler, stacked, s_model, hist, consumed,
+                fingerprint: dict, has_payload: bool, strategy) -> None:
+    assert not sched.buffer, "checkpoints are written at flush boundaries"
+    tree = {"state": stacked,
+            "loss": np.asarray(hist["loss"], np.float64),
+            "accs": np.asarray(hist["accs"], np.float32),
+            "wall": np.asarray(hist["wall"], np.float32),
+            "sim": np.asarray(hist["sim"], np.float64),
+            "stale": np.asarray(hist["stale"], np.float64),
+            "pids": np.asarray(hist["ids"], np.int32),
+            "consumed": np.asarray(consumed, np.int64)}
+    if s_model is not None:
+        tree["s_model"] = s_model
+    pending = sorted(sched.by_seq.values(), key=lambda r: r.seq)
+    if pending:
+        tree["pending"] = {
+            "seq": np.asarray([r.seq for r in pending], np.int64),
+            "client": np.asarray([r.client for r in pending], np.int32),
+            "wave": np.asarray([r.wave for r in pending], np.int32),
+            "version": np.asarray([r.version for r in pending], np.int64),
+            "arrival": np.asarray([r.arrival for r in pending], np.float64),
+            "loss": np.asarray([r.loss for r in pending], np.float32)}
+        if has_payload:
+            tree["pending_served"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[r.upload for r in pending])
+    if sched.deferred:
+        tree["deferred"] = {
+            "wave": np.asarray([w for w, _ in sched.deferred], np.int32),
+            "client": np.asarray([c for _, c in sched.deferred], np.int32)}
+    ckpt.save(fed.checkpoint_path, tree, metadata=dict(
+        fingerprint, engine="async", strategy=strategy.name,
+        rounds_done=sched.version, sim_now=sched.sim_now,
+        next_seq=sched.next_seq, wc=sched.wc, wi=sched.wi,
+        n_pending=len(pending), n_deferred=len(sched.deferred)))
+
+
+def _load_async(fed, stacked, s_model, m: int, fingerprint: dict,
+                payload_struct, has_payload: bool):
+    """Restore a flush-boundary checkpoint: (stacked, s_model, history
+    arrays, consumed, pending table, served rows, deferred table, meta)."""
+    meta = ckpt.metadata(fed.checkpoint_path)
+    if meta.get("engine") != "async" or "rounds_done" not in meta:
+        raise ValueError(f"{fed.checkpoint_path!r} is not an async-engine "
+                         f"checkpoint")
+    ckpt.check_fingerprint(fed.checkpoint_path, meta, fingerprint,
+                           ignore=("rounds",))
+    done = int(meta["rounds_done"])
+    if done > fed.rounds:
+        raise ValueError(f"checkpoint has {done} completed flushes but the "
+                         f"run asks for only {fed.rounds}")
+    k_buf = int(fingerprint["buffer_size"])
+    like = {"state": stacked,
+            "loss": np.zeros((done,), np.float64),
+            "accs": np.zeros((done, m), np.float32),
+            "wall": np.zeros((done,), np.float32),
+            "sim": np.zeros((done,), np.float64),
+            "stale": np.zeros((done,), np.float64),
+            "pids": np.zeros((done, k_buf), np.int32),
+            "consumed": np.zeros((m,), np.int64)}
+    if s_model is not None:
+        like["s_model"] = s_model
+    n_pend = int(meta.get("n_pending", 0))
+    served = None
+    if n_pend and has_payload:
+        like["pending_served"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pend,) + tuple(s.shape[1:]),
+                                           s.dtype), payload_struct)
+    # host-side restore: the float64 clock/loss tables must NOT round-trip
+    # through jax (x64 disabled would truncate them); the caller re-places
+    # the state on device itself
+    tree = ckpt.restore(fed.checkpoint_path, like, as_numpy=True)
+    served = tree.get("pending_served")
+    pending = ckpt.load_subtree(fed.checkpoint_path, "pending") \
+        if n_pend else {}
+    deferred = ckpt.load_subtree(fed.checkpoint_path, "deferred") \
+        if int(meta.get("n_deferred", 0)) else {}
+    return (tree["state"], tree.get("s_model"), tree, pending, served,
+            deferred, meta)
+
+
+# ---------------------------------------------------------------------------
+# engine body
+# ---------------------------------------------------------------------------
+
+def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
+              sample_counts: Sequence[int],
+              plans: Sequence[sampling.ParticipationPlan],
+              local_fit: Callable, eval_one: Callable,
+              s_data: Optional[np.ndarray],
+              test_toks: jnp.ndarray, test_labs: jnp.ndarray,
+              verbose: bool = False) -> dict:
+    """The async-engine body of ``run_federated`` (see module docstring).
+    ``fed.rounds`` counts FLUSHES; the plan list supplies the dispatch
+    stream (``rounds`` waves of the sync cohort size k >= buffer_size,
+    enough for ``rounds`` flushes of K uploads each)."""
+    from repro.core.federated import RoundRecord  # late: avoid import cycle
+
+    m = fed.n_clients
+    mode = fed.client_parallelism
+    k = int(plans[0].sampled.size)
+    K = int(fed.buffer_size) if fed.buffer_size else k
+    if not 1 <= K <= k:
+        raise ValueError(f"buffer_size must be in [1, cohort size {k}]; "
+                         f"got {K} (the plan stream supplies k uploads per "
+                         f"wave for rounds waves)")
+    Mc = int(fed.async_concurrency) if fed.async_concurrency else k
+    if Mc < 1:
+        raise ValueError(f"async_concurrency must be >= 1; got {Mc}")
+    decay = float(fed.staleness_decay)
+    if not 0.0 < decay <= 1.0:
+        raise ValueError(f"staleness_decay must be in (0, 1]; got {decay}")
+    latency = sampling.LatencyModel(fed.latency, fed.latency_scale,
+                                    fed.latency_sigma)
+    fingerprint = async_fingerprint(fed, K, Mc)
+    chunk = max(1, int(fed.chunk_rounds))
+    eval_every = max(1, int(fed.eval_every))
+
+    pstore = client_store.make_store("device", states, parallelism=mode)
+    put = pstore.place
+    state_ref = {"stacked": pstore.resident()}
+
+    codec = compress.get_codec(fed.uplink_codec)
+    compressed = not codec.is_identity and strategy.aggregate != "none"
+    payload_struct = jax.eval_shape(strategy.uplink, state_ref["stacked"])
+    has_payload = payload_struct is not None
+    per_down_b, _ = comm.per_client_comm(payload_struct)
+    per_b, per_e = comm.per_client_comm(
+        compress.wire_struct(codec, payload_struct, m)
+        if compressed and has_payload else payload_struct)
+    if not compressed:
+        per_down_b = per_b
+
+    personalized = strategy.aggregate == "personalized"
+    use_data = personalized and fed.use_data_sim and s_data is not None
+    use_model = personalized and fed.use_model_sim
+
+    s_model = None
+    probes = None
+    if use_model:
+        payload0 = tri_lora.tree_payload(state_ref["stacked"]["adapter"])
+        r = cka.stacked_cs(payload0).shape[-1]
+        probes = jax.random.normal(jax.random.key(fed.seed + 97),
+                                   (fed.cka_probes, r), jnp.float32)
+        s_model = cka.pairwise_model_similarity_stacked(
+            payload0, jax.random.key(fed.seed + 97), fed.cka_probes)
+    sm_ref = {"s_model": s_model}
+
+    consts = {"counts": jnp.asarray(np.asarray(sample_counts, np.int64)),
+              "s_data": jnp.asarray(s_data) if use_data else None,
+              "probes": probes}
+    eta = fed.pfedme_eta
+    seed = fed.seed
+    vfit = jax.vmap(local_fit)
+
+    # ---- jitted group fit: gather the dispatched rows, run the vmapped
+    # local fit + after_local, encode the uplink (per-record wave keys, EF
+    # advance), scatter back.  One compiled program per distinct group
+    # size (jit retraces by shape).
+    def _fit(st, ids, waves, toks, labs):
+        rows = client_batch.gather_clients(st, ids)
+        tr = strategy.trainable(rows)
+        w_ref = rows.get("w", {})
+        tr, losses = vfit(tr, w_ref, toks, labs)
+        new = dict(rows)
+        new.update(tr)
+        new = strategy.after_local(new, eta)
+        if compressed:
+            payload = strategy.uplink(new)
+            # the sync engines' exact per-(round, client) key stream: the
+            # record's wave IS its sync round index
+            keys = jax.vmap(lambda w, i: compress.client_key(seed, w, i))(
+                waves, ids)
+            _, served, ef_new = compress.encode_stacked(
+                codec, payload, new["ef"], keys)
+            new = dict(new, ef=ef_new)
+        else:
+            served = strategy.uplink(new)        # None for aggregate="none"
+        return client_batch.scatter_clients(st, ids, new), losses, served
+
+    fit_jit = _FIT_CACHE.get_or_build(
+        (task.base, task.cfg),
+        ("async-fit", strategy.name, fed.lr, fed.local_steps,
+         fed.batch_size, eta, mode, fed.uplink_codec,
+         seed if compressed else None),
+        lambda: jax.jit(_fit))
+
+    # ---- jitted flush: scatter the buffered served uploads over the
+    # current population payload, refresh S^model rows for the
+    # contributors, staleness-discount, aggregate, masked install.
+    def _flush(st, s_model_c, served_K, ids, stale, c):
+        pmask = jnp.zeros((m,), bool).at[ids].set(True)
+        col = None
+        if decay != 1.0:
+            # decay == 1.0 compiles the exact sync program (col_scale=None)
+            col = jnp.ones((m,), jnp.float32).at[ids].set(
+                jnp.power(decay, stale.astype(jnp.float32)))
+        served_m = client_batch.scatter_clients(strategy.uplink(st), ids,
+                                                served_K)
+        weights = None
+        if use_model:
+            cs_src = (served_m if compressed
+                      else tri_lora.tree_payload(st["adapter"]))
+            s_model_c = cka.refresh_rows_inline(
+                s_model_c, cka.stacked_cs(cs_src), ids, c["probes"])
+        if personalized:
+            sims = ([c["s_data"]] if use_data else []) \
+                + ([s_model_c] if use_model else [])
+            weights = aggregation.personalized_weights(
+                sum(sims), fed.self_weight, pmask, col_scale=col)
+        down = strategy.server_stacked(served_m, sample_counts=c["counts"],
+                                       weights=weights, participants=pmask,
+                                       col_scale=col)
+        if down is not None:
+            st = client_batch.select_clients(
+                pmask, strategy.install(st, down), st)
+        return st, s_model_c
+
+    flush_jit = None
+    if has_payload:
+        flush_jit = _FLUSH_CACHE.get_or_build(
+            (task.base, task.cfg),
+            ("async-flush", strategy.name, fed.self_weight, use_data,
+             use_model, mode, fed.uplink_codec, decay),
+            lambda: jax.jit(_flush))
+
+    veval = _EVAL_CACHE.get_or_build(
+        (task.base, task.cfg), ("async-eval", strategy.name, mode),
+        lambda: jax.jit(jax.vmap(eval_one)))
+
+    # ---- host driver state
+    waves = [np.asarray(p.sampled) for p in plans]
+    consumed = np.zeros(m, np.int64)     # per-client completed draw sessions
+    hist = {"loss": [], "accs": [], "wall": [], "sim": [], "stale": [],
+            "ids": []}
+    accs_carry = [np.zeros(m, np.float32)]
+    t_last = [time.perf_counter()]
+    sched_ref: dict = {}
+
+    def fit_group(records):
+        ids = [r.client for r in records]
+        wv = [r.wave for r in records]
+        toks, labs = [], []
+        for r in records:
+            ld = loaders[r.client]
+            # lazily fast-forward the client's deterministic stream over
+            # the waves it was not dispatched for: session index == wave,
+            # exactly the sync engines' one-session-per-round consumption
+            while consumed[r.client] < r.wave:
+                ld.skip(fed.local_steps)
+                consumed[r.client] += 1
+            bt = list(ld.batches(fed.local_steps))
+            consumed[r.client] += 1
+            toks.append(np.stack([b["tokens"] for b in bt]))
+            labs.append(np.stack([b["labels"] for b in bt]))
+        new_st, losses, served = fit_jit(
+            state_ref["stacked"], jnp.asarray(ids, jnp.int32),
+            jnp.asarray(wv, jnp.int32),
+            put(jnp.asarray(np.stack(toks))),
+            put(jnp.asarray(np.stack(labs))))
+        state_ref["stacked"] = new_st
+        losses = np.asarray(losses)
+        for j, r in enumerate(records):
+            r.loss = float(losses[j])
+            if served is not None:
+                r.upload = jax.tree.map(lambda l, j=j: l[j], served)
+
+    def on_flush(records, f, sim_now):
+        ids = np.asarray([r.client for r in records], np.int32)
+        stale = np.asarray([f - r.version for r in records], np.float64)
+        if has_payload:
+            served_K = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[r.upload for r in records])
+            st, sm = flush_jit(state_ref["stacked"], sm_ref["s_model"],
+                               served_K, jnp.asarray(ids),
+                               jnp.asarray(stale), consts)
+            state_ref["stacked"] = st
+            sm_ref["s_model"] = sm
+        evaluated = f % eval_every == 0 or f == fed.rounds - 1
+        if evaluated:
+            accs_carry[0] = np.asarray(veval(
+                strategy.trainable(state_ref["stacked"]),
+                test_toks, test_labs))
+        now = time.perf_counter()
+        hist["loss"].append(float(np.mean([r.loss for r in records])))
+        hist["accs"].append([float(a) for a in accs_carry[0]])
+        hist["wall"].append(now - t_last[0])
+        t_last[0] = now
+        hist["sim"].append(float(sim_now))
+        hist["stale"].append(float(np.mean(stale)))
+        hist["ids"].append(sorted(int(i) for i in ids))
+        if fed.checkpoint_path and ((f + 1) % chunk == 0
+                                    or f + 1 == fed.rounds):
+            _save_async(fed, sched_ref["sched"], state_ref["stacked"],
+                        sm_ref["s_model"], hist, consumed, fingerprint,
+                        has_payload, strategy)
+        if verbose:
+            print(f"[{strategy.name}] flush {f:3d} t={sim_now:8.2f} "
+                  f"loss {hist['loss'][-1]:.4f} "
+                  f"acc {float(np.mean(hist['accs'][-1])):.3f} "
+                  f"stale {hist['stale'][-1]:.2f} "
+                  f"({len(ids)} uploads)")
+
+    sched = AsyncScheduler(waves=waves, m=m, latency=latency, seed=fed.seed,
+                           buffer_size=K, concurrency=Mc, rounds=fed.rounds,
+                           fit_group=fit_group, flush_cb=on_flush)
+    sched_ref["sched"] = sched
+
+    # ---- resume from a flush-boundary checkpoint
+    if fed.checkpoint_path and fed.resume and \
+            not os.path.exists(fed.checkpoint_path):
+        warnings.warn(f"resume: no checkpoint at {fed.checkpoint_path!r} — "
+                      f"starting from flush 0 (checkpoints will be written "
+                      f"there)")
+    if fed.checkpoint_path and fed.resume and \
+            os.path.exists(fed.checkpoint_path):
+        st0, sm0, tree, pending, served_p, deferred, meta = _load_async(
+            fed, state_ref["stacked"], sm_ref["s_model"], m, fingerprint,
+            payload_struct, has_payload)
+        state_ref["stacked"] = put(jax.tree.map(jnp.asarray, st0))
+        sm_ref["s_model"] = None if sm0 is None else jnp.asarray(sm0)
+        done = int(meta["rounds_done"])
+        hist["loss"] = [float(v) for v in tree["loss"]]
+        hist["accs"] = [list(map(float, row)) for row in tree["accs"]]
+        hist["wall"] = [float(v) for v in tree["wall"]]
+        hist["sim"] = [float(v) for v in tree["sim"]]
+        hist["stale"] = [float(v) for v in tree["stale"]]
+        hist["ids"] = [[int(i) for i in row] for row in tree["pids"]]
+        consumed[:] = np.asarray(tree["consumed"])
+        accs_carry[0] = np.asarray(hist["accs"][-1], np.float32)
+        # fast-forward every client's data stream to its stored position
+        for i in range(m):
+            for _ in range(int(consumed[i])):
+                loaders[i].skip(fed.local_steps)
+        sched.version = done
+        sched.sim_now = float(meta["sim_now"])
+        sched.next_seq = int(meta["next_seq"])
+        sched.wc = int(meta["wc"])
+        sched.wi = int(meta["wi"])
+        for w, c in zip(np.atleast_1d(deferred.get("wave", [])),
+                        np.atleast_1d(deferred.get("client", []))):
+            sched.deferred.append((int(w), int(c)))
+            sched._deferred_clients[int(c)] = \
+                sched._deferred_clients.get(int(c), 0) + 1
+        if pending:
+            order = np.argsort(np.asarray(pending["seq"]))
+            for j in order:
+                rec = Arrival(seq=int(pending["seq"][j]),
+                              client=int(pending["client"][j]),
+                              wave=int(pending["wave"][j]),
+                              version=int(pending["version"][j]),
+                              arrival=float(pending["arrival"][j]),
+                              loss=float(pending["loss"][j]))
+                if has_payload:
+                    rec.upload = jax.tree.map(
+                        lambda l, j=j: jnp.asarray(np.asarray(l)[j]),
+                        served_p)
+                sched.by_seq[rec.seq] = rec
+                sched.busy.add(rec.client)
+                sched.in_flight += 1
+                heapq.heappush(sched.heap, (rec.arrival, rec.seq))
+        if verbose:
+            print(f"[{strategy.name}] resumed {done} flushes "
+                  f"from {fed.checkpoint_path}")
+
+    t_last[0] = time.perf_counter()
+    sched.run()
+
+    history = [
+        RoundRecord(
+            f, hist["loss"][f], hist["accs"][f],
+            uplink_bytes=per_b * K, downlink_bytes=per_down_b * K,
+            wall_s=hist["wall"][f],
+            participants=hist["ids"][f], sampled=hist["ids"][f], dropped=[],
+            uplink_elems=per_e * K,
+            evaluated=(f % eval_every == 0 or f == fed.rounds - 1))
+        for f in range(fed.rounds)]
+
+    return {
+        "method": strategy.name,
+        "history": history,
+        "final_accs": history[-1].accs,
+        "mean_acc": history[-1].mean_acc,
+        "min_acc": history[-1].min_acc,
+        "max_acc": history[-1].max_acc,
+        "uplink_floats_per_round": history[-1].uplink_elems,
+        "uplink_bytes_per_round": history[-1].uplink_bytes,
+        "downlink_bytes_per_round": history[-1].downlink_bytes,
+        "sim_times": list(hist["sim"]),
+        "staleness_mean": list(hist["stale"]),
+        "states": client_batch.unstack_states(state_ref["stacked"]),
+    }

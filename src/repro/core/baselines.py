@@ -156,19 +156,23 @@ class Strategy:
         return aggregation.aggregate_payloads(payloads, weights)
 
     def server_stacked(self, payload: Any, *, sample_counts,
-                       weights=None, participants=None) -> Optional[Any]:
+                       weights=None, participants=None,
+                       col_scale=None) -> Optional[Any]:
         """Batched-state variant of :meth:`server`: ``payload`` is ONE pytree
         with a leading client axis (m, …); returns a stacked downlink of the
         same layout (FedAvg results are broadcast back over the client axis)
         or None when the strategy never communicates.  ``participants``
         masks the aggregation as in :meth:`server`; the caller installs the
-        downlink to participants only (`client_batch.select_clients`)."""
+        downlink to participants only (`client_batch.select_clients`).
+        ``col_scale`` is the async engine's per-contributor staleness
+        discount (DESIGN.md §13); it reaches FedAvg directly, while the
+        personalized path bakes it into ``weights`` upstream."""
         if self.aggregate == "none":
             return None
         m = len(sample_counts)
         if self.aggregate == "fedavg":
             g = aggregation.fedavg_stacked(payload, sample_counts,
-                                           participants)
+                                           participants, col_scale=col_scale)
             return client_batch.broadcast_to_clients(g, m)
         assert weights is not None, "personalized aggregation needs weights"
         return aggregation.aggregate_stacked(payload, weights)

@@ -181,6 +181,7 @@ class ChunkPrefetcher:
         self._schedule = list(schedule)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="chunk-prefetcher")
         self._thread.start()
@@ -208,7 +209,13 @@ class ChunkPrefetcher:
     def get(self):
         """Next chunk's ``(payload, produce_seconds)``, in schedule order.
         Blocks until the producer has it ready; the time spent blocked here
-        is the engine's residual (un-overlapped) host stall."""
+        is the engine's residual (un-overlapped) host stall.  After
+        :meth:`close` the queue is never fed again, so ``get()`` raises
+        ``RuntimeError`` immediately instead of blocking forever."""
+        if self._closed:
+            raise RuntimeError(
+                "ChunkPrefetcher.get() after close(): the producer is "
+                "stopped and the queue will never be fed again")
         item = self._q.get()
         if item is self._DONE:
             raise StopIteration("prefetch schedule exhausted")
@@ -217,15 +224,23 @@ class ChunkPrefetcher:
         return item
 
     def close(self) -> None:
-        """Stop the producer; safe to call multiple times."""
+        """Stop the producer; safe to call multiple times.  Drains the
+        queue REPEATEDLY until the thread exits: one drain is racy — a
+        producer blocked in ``_put`` completes its in-flight put into the
+        slot the drain just freed and can die leaving a stale item and no
+        sentinel behind."""
+        self._closed = True
         self._stop.set()
-        # drain so a blocked producer observes the stop event
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=5.0)
+        deadline = time.perf_counter() + 5.0
+        while True:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.1)
+            if not self._thread.is_alive() or time.perf_counter() > deadline:
+                break
 
 
 def drive_chunks(carry: Any, schedule: Sequence[tuple[int, int]],

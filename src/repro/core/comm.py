@@ -58,6 +58,18 @@ def tree_elems(tree: Any) -> int:
                for l in jax.tree.leaves(tree))
 
 
+def _check_divisible(total: int, m: int, leaves: list, unit: str) -> None:
+    """The per-client split is only meaningful if every leaf carries the
+    same leading client axis; a ragged tree (some leaf missing the m axis)
+    makes ``total`` indivisible.  Raise — a bare assert would vanish under
+    ``python -O`` and silently misprice the wire."""
+    if total % m != 0:
+        shapes = [tuple(l.shape) for l in leaves]
+        raise ValueError(
+            f"ragged stacked payload: total {unit} {total} not divisible by "
+            f"leading client axis m={m}; leaf shapes {shapes}")
+
+
 def stacked_per_client_bytes(stacked: Any) -> int:
     """Per-client payload bytes of a STACKED payload (leaves (m, …)):
     total bytes divided by the leading client axis."""
@@ -66,7 +78,7 @@ def stacked_per_client_bytes(stacked: Any) -> int:
         return 0
     m = int(leaves[0].shape[0])
     total = tree_bytes(stacked)
-    assert total % m == 0, (total, m)
+    _check_divisible(total, m, leaves, "bytes")
     return total // m
 
 
@@ -77,7 +89,7 @@ def stacked_per_client_elems(stacked: Any) -> int:
         return 0
     m = int(leaves[0].shape[0])
     total = tree_elems(stacked)
-    assert total % m == 0, (total, m)
+    _check_divisible(total, m, leaves, "elems")
     return total // m
 
 

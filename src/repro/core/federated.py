@@ -102,7 +102,7 @@ _LOCAL_FIT_CACHE = JitCache(maxsize=16)
 _EVAL_CACHE = JitCache(maxsize=16)
 
 PARALLELISM_MODES = ("loop", "vmap", "shard")
-ENGINES = ("eager", "scan")
+ENGINES = ("eager", "scan", "async")
 
 
 @dataclasses.dataclass
@@ -130,6 +130,17 @@ class FedConfig:
     #                                   off-cadence rounds report the LAST
     #                                   evaluated accuracies (stale, marked by
     #                                   RoundRecord.evaluated=False)
+    # --- asynchronous buffered runtime (repro.core.async_engine, §13) ------
+    buffer_size: int = 0              # async: aggregate every K arrivals
+    #                                   (0 = cohort size k → zero staleness
+    #                                   under uniform latency)
+    async_concurrency: int = 0        # async: max clients in flight
+    #                                   (0 = cohort size k; must be >= K)
+    staleness_decay: float = 1.0      # async: contribution discount
+    #                                   decay**staleness (1.0 = no discount)
+    latency: str = "uniform"          # async: "uniform"|"lognormal"|"exp"
+    latency_scale: float = 1.0        # async: latency scale (virtual time)
+    latency_sigma: float = 0.5        # async: lognormal sigma
     # --- uplink compression (repro.core.compress, DESIGN.md §10) -----------
     uplink_codec: str = "none"        # "none" | "bf16" | "int8" | "int4"
     # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
@@ -277,9 +288,23 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         raise ValueError(f"engine={fed.engine!r}; expected one of {ENGINES}")
     if fed.chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1; got {fed.chunk_rounds}")
-    if fed.engine != "scan" and (fed.checkpoint_path or fed.resume):
-        raise ValueError("checkpoint_path/resume require engine='scan' "
-                         "(the eager engine does not checkpoint)")
+    if fed.engine not in ("scan", "async") and (fed.checkpoint_path
+                                                or fed.resume):
+        raise ValueError("checkpoint_path/resume require engine='scan' or "
+                         "'async' (the eager engine does not checkpoint)")
+    if fed.engine == "async":
+        if fed.straggler_frac > 0.0:
+            raise ValueError(
+                "engine='async' replaces the straggler drop mask with the "
+                "latency model (FedConfig.latency); set straggler_frac=0")
+        if mode == "loop":
+            raise ValueError("engine='async' requires a vectorized "
+                             "client_parallelism ('vmap'/'shard')")
+        if fed.client_store != "device":
+            raise ValueError("engine='async' currently requires "
+                             "client_store='device'")
+        sampling.LatencyModel(fed.latency, fed.latency_scale,
+                              fed.latency_sigma)  # validates latency knobs
     if fed.eval_every < 1:
         raise ValueError(f"eval_every must be >= 1; got {fed.eval_every}")
     if fed.client_store not in client_store.STORE_BACKENDS:
@@ -417,6 +442,18 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             local_fit=_local_fit, eval_one=_eval_one, s_data=s_data,
             test_toks=test_toks, test_labs=test_labs, verbose=verbose)
 
+    # ---- asynchronous buffered engine (repro.core.async_engine, §13):
+    # plan-driven dispatch waves, seeded latency arrivals, buffer-of-K
+    # staleness-weighted flushes — sync-equivalent in the zero-staleness
+    # limit (uniform latency, K = cohort size)
+    if fed.engine == "async":
+        from repro.core import async_engine
+        return async_engine.run_async(
+            task=task, fed=fed, strategy=strategy, states=states,
+            loaders=loaders, sample_counts=sample_counts, plans=plans,
+            local_fit=_local_fit, eval_one=_eval_one, s_data=s_data,
+            test_toks=test_toks, test_labs=test_labs, verbose=verbose)
+
     # cache the jitted local step / eval across run_federated calls (the
     # benchmark suite runs the same (task, method, hyper) combination many
     # times and XLA compilation dominates otherwise)
@@ -466,7 +503,7 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         # ---- reference path: one dispatch per client per round
         for rnd in range(fed.rounds):
             plan = plans[rnd]
-            t0 = time.time()
+            t0 = time.perf_counter()
             in_sample = plan.mask(m, which="sampled")
             losses = []
             for i in range(m):
@@ -539,7 +576,7 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
 
         for rnd in range(fed.rounds):
             plan = plans[rnd]
-            t0 = time.time()
+            t0 = time.perf_counter()
             toks, labs = client_batch.stack_client_batches(loaders,
                                                            fed.local_steps)
             tr = strategy.trainable(stacked)
@@ -628,7 +665,7 @@ def _round_record(rnd: int, losses, accs: list, rc: comm.RoundComm,
     return RoundRecord(
         rnd, float(np.mean(losses)), accs,
         uplink_bytes=rc.uplink_bytes, downlink_bytes=rc.downlink_bytes,
-        wall_s=time.time() - t0,
+        wall_s=time.perf_counter() - t0,
         participants=plan.participants.tolist(),
         sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
         uplink_elems=rc.uplink_elems, evaluated=evaluated)

@@ -38,9 +38,11 @@ from typing import Optional, Sequence
 import numpy as np
 
 SAMPLERS = ("uniform", "weighted", "round_robin")
+LATENCIES = ("uniform", "lognormal", "exp")
 
 _SAMPLE_TAG = 0x5A17
 _STRAGGLE_TAG = 0xD209
+_LATENCY_TAG = 0x1A7E
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +143,48 @@ def full_plan(m: int, rnd: int) -> ParticipationPlan:
     fast path."""
     ids = np.arange(m)
     return ParticipationPlan(rnd, ids, np.empty(0, ids.dtype), ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Seeded per-client round-trip latency — the async engine's
+    generalization of the straggler drop mask (DESIGN.md §13).  Instead of
+    dropping ``floor(frac·k)`` uploads, every dispatched client finishes
+    after a latency drawn from a round-keyed ``default_rng`` stream, so the
+    ARRIVAL ORDER (and hence buffer composition and staleness) is a pure
+    function of ``(seed, config)`` — the same no-hidden-state contract as
+    :func:`build_plan`.
+
+    Kinds:
+
+    * ``"uniform"`` — every draw is exactly ``scale`` (degenerate, zero
+      heterogeneity).  This is the zero-staleness limit used by the
+      async⇄sync equivalence tests: a whole wave arrives simultaneously.
+    * ``"lognormal"`` — ``scale · exp(sigma·N(0,1))``: the classic
+      heavy-tailed device population (a few clients are much slower).
+    * ``"exp"`` — ``scale · Exp(1)``: memoryless arrivals.
+    """
+    kind: str = "uniform"
+    scale: float = 1.0
+    sigma: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in LATENCIES:
+            raise ValueError(
+                f"latency kind={self.kind!r}; expected one of {LATENCIES}")
+        if self.scale <= 0:
+            raise ValueError(f"latency scale must be > 0; got {self.scale}")
+
+    def draw(self, m: int, wave: int, seed: int) -> np.ndarray:
+        """Per-client latencies (m,) float64 for dispatch wave ``wave`` —
+        deterministic in (seed, wave), independent of the sampler's and
+        straggler's RNG streams."""
+        if self.kind == "uniform":
+            return np.full(m, self.scale, np.float64)
+        rng = np.random.default_rng((seed, wave, _LATENCY_TAG))
+        if self.kind == "lognormal":
+            return self.scale * np.exp(self.sigma * rng.standard_normal(m))
+        return self.scale * rng.exponential(1.0, size=m)
 
 
 @dataclasses.dataclass(frozen=True)

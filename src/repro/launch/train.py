@@ -38,6 +38,15 @@ it over ``--chunk-rounds`` rounds per dispatch, checkpointing the full
 stacked adapter state to ``--ckpt`` at every chunk boundary; ``--resume``
 restores it, fast-forwards the data streams, and reproduces the
 uninterrupted run exactly.
+
+Asynchronous buffered rounds (DESIGN.md §13): ``--engine async`` replaces
+the per-round barrier with the FedBuff-style buffered server of
+:mod:`repro.core.async_engine` — clients dispatch in plan order, arrive
+under the seeded virtual-latency model (``--latency`` /
+``--latency-scale`` / ``--latency-sigma``), and every ``--buffer-size``
+arrivals the server aggregates with the ``--staleness-decay`` discount.
+In the zero-staleness limit (uniform latency, buffer = cohort) it is the
+eager driver's history.
 """
 from __future__ import annotations
 
@@ -72,13 +81,28 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         straggler_frac: float = 0.0, engine: str = "eager",
         chunk_rounds: int = 8, resume: bool = False,
         uplink_codec: str = "none", scan_donate: bool = True,
-        scan_prefetch: bool = True, client_store: str = "device") -> dict:
+        scan_prefetch: bool = True, client_store: str = "device",
+        buffer_size: int = 0, async_concurrency: int = 0,
+        staleness_decay: float = 1.0, latency: str = "uniform",
+        latency_scale: float = 1.0, latency_sigma: float = 0.5) -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
-    assert engine in ("eager", "scan"), engine
+    assert engine in ("eager", "scan", "async"), engine
     vectorized = client_parallelism == "vmap"
-    if engine == "scan" and not vectorized:
-        raise ValueError("engine='scan' runs on the stacked client axis; "
-                         "use client_parallelism='vmap'")
+    if engine in ("scan", "async") and not vectorized:
+        raise ValueError(f"engine={engine!r} runs on the stacked client "
+                         f"axis; use client_parallelism='vmap'")
+    if engine == "async":
+        if resume:
+            raise ValueError("--resume is not supported by the LM driver's "
+                             "async engine (use the classification runtime "
+                             "for resumable async runs)")
+        if straggler_frac > 0.0:
+            raise ValueError("engine='async' replaces the straggler drop "
+                             "mask with the latency model; set "
+                             "straggler_frac=0")
+        if client_store != "device":
+            raise ValueError("engine='async' requires client_store='device'")
+        sampling.LatencyModel(latency, latency_scale, latency_sigma)
     if client_store not in client_store_lib.STORE_BACKENDS:
         raise ValueError(f"client_store={client_store!r}; expected one of "
                          f"{client_store_lib.STORE_BACKENDS}")
@@ -183,6 +207,23 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         return {"history": history, "adapters": adapters, "cfg": cfg,
                 "base": base}
 
+    if engine == "async":
+        history, adapters = _run_async_lm(
+            local_fit_raw=_local_fit, draw=_draw, stacked=stacked,
+            plans=plans, method=method, clients=clients, rounds=rounds,
+            seed=seed, verbose=verbose, codec=codec, compressed=compressed,
+            payload_of=payload_of, buffer_size=buffer_size,
+            concurrency=async_concurrency, staleness_decay=staleness_decay,
+            latency_model=sampling.LatencyModel(latency, latency_scale,
+                                                latency_sigma))
+        if ckpt:
+            save(ckpt, {"adapter_client0": adapters[0]},
+                 metadata={"arch": arch, "rounds": rounds, "method": method})
+            if verbose:
+                print(f"saved adapter checkpoint -> {ckpt}")
+        return {"history": history, "adapters": adapters, "cfg": cfg,
+                "base": base}
+
     if engine == "scan":
         history, adapters = _run_scan_lm(
             cfg=cfg, local_fit_raw=_local_fit, draw=_draw,
@@ -200,7 +241,7 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
               else [compress.init_ef(payload_of(a)) for a in adapters])
     history = []
     for rnd in range(rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()
         plan = plans[rnd]
         smask = plan.mask(clients, which="sampled")
         cmask = jnp.asarray(plan.mask(clients)) if partial else None
@@ -298,7 +339,7 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
                "uplink_bytes": rc.uplink_bytes,
                "downlink_bytes": rc.downlink_bytes,
                "participants": plan.participants.tolist(),
-               "wall_s": time.time() - t0}
+               "wall_s": time.perf_counter() - t0}
         history.append(rec)
         if verbose:
             print(f"round {rnd:3d}  loss {rec['loss']:.4f}  "
@@ -341,7 +382,7 @@ def _run_host_lm(*, local_fit, draw, adapters, plans, method: str,
 
     history = []
     for rnd, plan in enumerate(plans):
-        t0 = time.time()
+        t0 = time.perf_counter()
         drawn = [draw(i) for i in range(clients)]   # all: rng parity
         cids = plan.sampled
         toks = jnp.asarray(np.stack([drawn[i][0] for i in cids]))
@@ -406,7 +447,7 @@ def _run_host_lm(*, local_fit, draw, adapters, plans, method: str,
                "uplink_bytes": rc.uplink_bytes,
                "downlink_bytes": rc.downlink_bytes,
                "participants": plan.participants.tolist(),
-               "wall_s": time.time() - t0}
+               "wall_s": time.perf_counter() - t0}
         history.append(rec)
         if verbose:
             print(f"round {rnd:3d}  loss {rec['loss']:.4f}  "
@@ -414,6 +455,148 @@ def _run_host_lm(*, local_fit, draw, adapters, plans, method: str,
                   f"({plan.n_participants}/{clients} clients)  "
                   f"{rec['wall_s']:.1f}s", flush=True)
     return history, store.unstack()
+
+
+def _run_async_lm(*, local_fit_raw, draw, stacked, plans, method: str,
+                  clients: int, rounds: int, seed: int, verbose: bool,
+                  codec, compressed: bool, payload_of,
+                  buffer_size: int, concurrency: int,
+                  staleness_decay: float,
+                  latency_model: sampling.LatencyModel):
+    """Asynchronous buffered LM rounds (``--engine async``, DESIGN.md §13):
+    the :class:`repro.core.async_engine.AsyncScheduler` replays seeded
+    virtual-time arrivals; dispatched cohorts fit via a gathered vmapped
+    program, uploads buffer at the server, and every ``buffer_size``
+    arrivals the aggregate is rebuilt with the ``staleness_decay**s``
+    column discount.  Zero-staleness limit ≡ the eager driver's history."""
+    from repro.core.async_engine import AsyncScheduler
+
+    k = int(plans[0].sampled.size)
+    K = int(buffer_size) if buffer_size else k
+    if not 1 <= K <= k:
+        raise ValueError(f"buffer_size must be in [1, cohort size {k}]; "
+                         f"got {K}")
+    Mc = int(concurrency) if concurrency else k
+    decay = float(staleness_decay)
+    if not 0.0 < decay <= 1.0:
+        raise ValueError(f"staleness_decay must be in (0, 1]; got {decay}")
+    vfit = jax.vmap(local_fit_raw)
+    has_payload = method in ("celora", "fedavg")
+    if has_payload:
+        payload_struct = jax.eval_shape(payload_of, stacked)
+        per_down_b, _ = comm.per_client_comm(payload_struct)
+        per_b, per_e = comm.per_client_comm(
+            compress.wire_struct(codec, payload_struct, clients)
+            if compressed else payload_struct)
+        if not compressed:
+            per_down_b = per_b
+    else:
+        per_b = per_e = per_down_b = 0
+    state = {"stacked": stacked,
+             "ef": compress.init_ef(payload_of(stacked))
+             if compressed else None}
+
+    def _fit(stk, ef, ids, waves, toks, labs):
+        rows = client_batch.gather_clients(stk, ids)
+        new, ls = vfit(rows, toks, labs)
+        if compressed:
+            keys = jax.vmap(lambda w, i: compress.client_key(seed, w, i))(
+                waves, ids)
+            ef_rows = client_batch.gather_clients(ef, ids)
+            _, served, ef_new = compress.encode_stacked(
+                codec, payload_of(new), ef_rows, keys)
+            ef = client_batch.scatter_clients(ef, ids, ef_new)
+        else:
+            served = payload_of(new) if has_payload else None
+        return client_batch.scatter_clients(stk, ids, new), ef, ls, served
+
+    fit_jit = jax.jit(_fit)
+
+    def _flush(stk, served_K, ids, stale):
+        pmask = jnp.zeros((clients,), bool).at[ids].set(True)
+        col = None
+        if decay != 1.0:
+            col = jnp.ones((clients,), jnp.float32).at[ids].set(
+                jnp.power(decay, stale.astype(jnp.float32)))
+        served_m = client_batch.scatter_clients(payload_of(stk), ids,
+                                                served_K)
+        if method == "celora":
+            s_model = cka.pairwise_model_similarity_stacked(
+                served_m, jax.random.key(seed + 99), 32)
+            w = aggregation.personalized_weights(s_model, participants=pmask,
+                                                 col_scale=col)
+            mixed = aggregation.aggregate_stacked(served_m, w)
+            stk = client_batch.select_clients(
+                pmask, tri_lora.tree_load_payload(stk, mixed), stk)
+        else:
+            g = aggregation.fedavg_stacked(served_m, jnp.ones(clients),
+                                           pmask, col_scale=col)
+            stk = client_batch.select_clients(
+                pmask, client_batch.broadcast_to_clients(g, clients), stk)
+        return stk
+
+    flush_jit = jax.jit(_flush) if has_payload else None
+
+    consumed = np.zeros(clients, np.int64)
+    history: list = []
+    t_last = [time.perf_counter()]
+
+    def fit_group(records):
+        ids, wv, toks, labs = [], [], [], []
+        for r in records:
+            # lazy draw-and-discard keeps each client's stream position at
+            # one session per wave — the eager driver's rng parity
+            while consumed[r.client] < r.wave:
+                draw(r.client)
+                consumed[r.client] += 1
+            tk, lb = draw(r.client)
+            consumed[r.client] += 1
+            ids.append(r.client)
+            wv.append(r.wave)
+            toks.append(tk)
+            labs.append(lb)
+        new_stk, new_ef, ls, served = fit_jit(
+            state["stacked"], state["ef"], jnp.asarray(ids, jnp.int32),
+            jnp.asarray(wv, jnp.int32), jnp.asarray(np.stack(toks)),
+            jnp.asarray(np.stack(labs)))
+        state["stacked"], state["ef"] = new_stk, new_ef
+        ls = np.asarray(ls)
+        for j, r in enumerate(records):
+            r.loss = float(ls[j, -1])
+            if served is not None:
+                r.upload = jax.tree.map(lambda l, j=j: l[j], served)
+
+    def on_flush(records, f, sim_now):
+        ids = np.asarray(sorted(r.client for r in records), np.int32)
+        stale = np.asarray([f - r.version for r in records], np.float64)
+        if has_payload:
+            served_K = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[r.upload for r in records])
+            state["stacked"] = flush_jit(
+                state["stacked"], served_K,
+                jnp.asarray([r.client for r in records], jnp.int32),
+                jnp.asarray(stale))
+        now = time.perf_counter()
+        rec = {"round": f,
+               "loss": float(np.mean([r.loss for r in records])),
+               "uplink_floats": per_e * K, "uplink_bytes": per_b * K,
+               "downlink_bytes": per_down_b * K,
+               "participants": [int(i) for i in ids],
+               "wall_s": now - t_last[0], "sim_t": float(sim_now),
+               "staleness": float(np.mean(stale))}
+        t_last[0] = now
+        history.append(rec)
+        if verbose:
+            print(f"flush {f:3d}  t={sim_now:8.2f}  loss {rec['loss']:.4f}"
+                  f"  uplink {rec['uplink_bytes']}B  stale "
+                  f"{rec['staleness']:.2f}", flush=True)
+
+    sched = AsyncScheduler(
+        waves=[np.asarray(p.sampled) for p in plans], m=clients,
+        latency=latency_model, seed=seed, buffer_size=K, concurrency=Mc,
+        rounds=rounds, fit_group=fit_group, flush_cb=on_flush)
+    sched.run()
+    return history, client_batch.unstack_states(state["stacked"])
 
 
 def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
@@ -602,8 +785,11 @@ def main():
                     choices=["uniform", "weighted", "round_robin"])
     ap.add_argument("--straggler-frac", type=float, default=0.0,
                     help="fraction of sampled clients dropped after local fit")
-    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
-                    help="scan = compiled multi-round engine (DESIGN.md §9)")
+    ap.add_argument("--engine", default="eager",
+                    choices=["eager", "scan", "async"],
+                    help="scan = compiled multi-round engine (DESIGN.md "
+                         "§9); async = buffered staleness-weighted server "
+                         "(DESIGN.md §13)")
     ap.add_argument("--chunk-rounds", type=int, default=8,
                     help="scan engine: rounds fused per dispatch")
     ap.add_argument("--resume", action="store_true",
@@ -618,6 +804,21 @@ def main():
     ap.add_argument("--no-prefetch", action="store_true",
                     help="scan engine: disable overlapped chunk prefetch "
                          "(DESIGN.md §11)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async engine: aggregate every K arrivals "
+                         "(0 = cohort size, the zero-staleness limit)")
+    ap.add_argument("--async-concurrency", type=int, default=0,
+                    help="async engine: max clients in flight "
+                         "(0 = cohort size)")
+    ap.add_argument("--staleness-decay", type=float, default=1.0,
+                    help="async engine: contribution discount "
+                         "decay**staleness (1.0 = none)")
+    ap.add_argument("--latency", default="uniform",
+                    choices=["uniform", "lognormal", "exp"],
+                    help="async engine: virtual client latency model")
+    ap.add_argument("--latency-scale", type=float, default=1.0)
+    ap.add_argument("--latency-sigma", type=float, default=0.5,
+                    help="async engine: lognormal latency sigma")
     ap.add_argument("--client-store", default="device",
                     choices=["device", "sharded", "host"],
                     help="population residency (DESIGN.md §12): device-"
@@ -636,7 +837,12 @@ def main():
               uplink_codec=args.uplink_codec,
               scan_donate=not args.no_donate,
               scan_prefetch=not args.no_prefetch,
-              client_store=args.client_store)
+              client_store=args.client_store,
+              buffer_size=args.buffer_size,
+              async_concurrency=args.async_concurrency,
+              staleness_decay=args.staleness_decay, latency=args.latency,
+              latency_scale=args.latency_scale,
+              latency_sigma=args.latency_sigma)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")
 

@@ -1,12 +1,37 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
 only launch/dryrun.py (a separate process) requests 512 placeholder devices.
+
+``test_kernels.py`` is excluded from in-process collection and runs in a
+fresh interpreter via ``test_kernels_isolated.py`` instead: its Pallas
+interpret-mode programs segfault XLA:CPU when compiled late in a long
+single-process session (they pass in a clean process — see DESIGN.md §13,
+"kernel-suite isolation").  Set ``REPRO_KERNELS_INPROCESS=1`` to collect
+it in-process (the subprocess harness does; useful when bisecting the
+crash itself).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.models.config import ModelConfig
+
+if not os.environ.get("REPRO_KERNELS_INPROCESS"):
+    collect_ignore = ["test_kernels.py"]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """Drop XLA executables at module boundaries.  The tier-1 suite runs
+    hundreds of distinct jit compilations through one CPU process; with
+    every compiled program kept alive, a late ``backend_compile`` segfaults
+    (history-dependent — the same test passes in a fresh interpreter, see
+    DESIGN.md §13).  No module needs another module's compilations, so the
+    cache is cleared after each; jit rebuilds on demand."""
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,267 @@
+"""Asynchronous buffered engine (repro.core.async_engine, DESIGN.md §13):
+the zero-staleness limit (uniform latency, buffer = cohort) reproduces the
+sync engines' histories across strategies, codecs, and partial
+participation; lognormal/exp runs are deterministic in (seed, config);
+kill-then-resume mid-buffer replays the uninterrupted run exactly; the
+staleness discount and the latency model behave as specified."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import sampling
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+def _run(fed_setup, method, engine, rounds=2, **kw):
+    task, ctrain, ctest, m = fed_setup
+    fed = FedConfig(method=method, n_clients=m, rounds=rounds, local_steps=4,
+                    batch_size=8, lr=1e-2, feature_samples=64,
+                    gmm_components=2, engine=engine, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+def _assert_history_close(ref, out, states_atol=5e-4):
+    """The sync⇄async zero-staleness contract: identical cohorts and byte
+    accounting, allclose loss/accuracy/states (same bar as eager⇄scan)."""
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.sampled == r_out.sampled
+        assert r_ref.participants == r_out.participants
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+        assert r_ref.downlink_bytes == r_out.downlink_bytes
+        assert r_ref.uplink_elems == r_out.uplink_elems
+        assert abs(r_ref.train_loss - r_out.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-3)
+        assert r_ref.wall_s >= 0.0
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=states_atol), s_ref, s_out)
+
+
+# ---------------------------------------------------------------------------
+# zero-staleness equivalence matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["celora", "celora_fedavg", "fedpetuning",
+                                    "pfedme_lora", "lora_loc"])
+def test_async_matches_sync_methods(fed_setup, method):
+    """Uniform latency + buffer = cohort: each flush is one sync round, for
+    personalized / fedavg / prox / non-communicating strategies."""
+    ref = _run(fed_setup, method, "eager")
+    out = _run(fed_setup, method, "async")
+    _assert_history_close(ref, out)
+
+
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8", "int4"])
+def test_async_matches_sync_codecs(fed_setup, codec):
+    """All four uplink codecs, full participation: the async engine encodes
+    at dispatch with the record's wave as the key-round, hitting the sync
+    engines' exact per-(round, client) key stream, and the EF residual
+    advances inside the client's own dispatch."""
+    ref = _run(fed_setup, "celora", "eager", uplink_codec=codec)
+    out = _run(fed_setup, "celora", "async", uplink_codec=codec)
+    _assert_history_close(ref, out)
+
+
+@pytest.mark.parametrize("method", ["celora", "celora_fedavg"])
+def test_async_matches_sync_partial(fed_setup, method):
+    """Partial participation (uncompressed wire): wave cohorts become the
+    flush cohorts, absentees' state and S^model rows stay frozen."""
+    ref = _run(fed_setup, method, "eager", participation=0.5, seed=3)
+    out = _run(fed_setup, method, "async", participation=0.5, seed=3)
+    _assert_history_close(ref, out)
+
+
+def test_async_matches_scan(fed_setup):
+    """The scan engine is the other sync reference; close the triangle."""
+    ref = _run(fed_setup, "celora", "scan", chunk_rounds=2)
+    out = _run(fed_setup, "celora", "async")
+    _assert_history_close(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# genuinely-async behavior
+# ---------------------------------------------------------------------------
+
+def _async_kw(**kw):
+    base = dict(latency="lognormal", latency_sigma=1.0, buffer_size=2,
+                staleness_decay=0.7, uplink_codec="int8", seed=5)
+    base.update(kw)
+    return base
+
+
+def test_async_deterministic(fed_setup):
+    """The whole interleaving is a pure function of (seed, config): two
+    identical lognormal runs are bit-equal, including the virtual clock."""
+    a = _run(fed_setup, "celora", "async", rounds=3, **_async_kw())
+    b = _run(fed_setup, "celora", "async", rounds=3, **_async_kw())
+    for ra, rb in zip(a["history"], b["history"]):
+        assert ra.train_loss == rb.train_loss
+        assert ra.accs == rb.accs
+        assert ra.sampled == rb.sampled
+    assert a["sim_times"] == b["sim_times"]
+    assert a["staleness_mean"] == b["staleness_mean"]
+    assert a["staleness_mean"][-1] > 0.0   # K < cohort ⇒ real staleness
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a["states"], b["states"])
+
+
+def test_async_overcommit_concurrency_completes(fed_setup):
+    """concurrency > cohort overlaps waves, so the finite plan stream can
+    run dry while the last undispatched records belong to clients parked
+    in a partially-filled buffer; the starvation flush must complete the
+    run (short final flushes) instead of deadlocking (regression: the
+    fed_async benchmark's wave-overlap config once raised the deadlock
+    diagnostic at 7/8 flushes)."""
+    out = _run(fed_setup, "celora_fedavg", "async", rounds=4,
+               latency="lognormal", latency_sigma=1.0, buffer_size=2,
+               async_concurrency=8, participation=0.5, seed=5)
+    assert len(out["history"]) == 4
+    assert all(1 <= len(r.participants) <= 2 for r in out["history"])
+
+
+def test_async_seed_changes_schedule(fed_setup):
+    a = _run(fed_setup, "celora", "async", rounds=3, **_async_kw(seed=5))
+    b = _run(fed_setup, "celora", "async", rounds=3, **_async_kw(seed=6))
+    assert a["sim_times"] != b["sim_times"]
+
+
+def test_async_staleness_decay_changes_aggregate(fed_setup):
+    """With real staleness the decay**staleness column scale must reach the
+    aggregation (decay=1.0 vs 0.3 diverge); with zero staleness it is a
+    no-op by construction."""
+    kw = dict(latency="lognormal", latency_sigma=1.0, buffer_size=2, seed=5)
+    a = _run(fed_setup, "celora_fedavg", "async", rounds=3,
+             staleness_decay=1.0, **kw)
+    b = _run(fed_setup, "celora_fedavg", "async", rounds=3,
+             staleness_decay=0.3, **kw)
+    assert any(ra.accs != rb.accs or ra.train_loss != rb.train_loss
+               for ra, rb in zip(a["history"], b["history"])) or \
+        not np.allclose(
+            np.concatenate([np.ravel(x) for x in
+                            jax.tree.leaves(a["states"])]),
+            np.concatenate([np.ravel(x) for x in
+                            jax.tree.leaves(b["states"])]))
+    c = _run(fed_setup, "celora_fedavg", "async", rounds=2,
+             staleness_decay=0.3)          # uniform latency, K = cohort
+    ref = _run(fed_setup, "celora_fedavg", "eager", rounds=2)
+    _assert_history_close(ref, c)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,method", [("int8", "celora"),
+                                          ("none", "celora"),
+                                          ("none", "lora_loc")])
+def test_async_resume_mid_buffer(fed_setup, tmp_path, codec, method):
+    """Kill after 2 of 4 flushes with buffer_size=2 < cohort=4 — the saved
+    state carries genuinely in-flight records (already-fitted losses and
+    encoded uploads) — and the resumed run replays the uninterrupted
+    history, virtual clock, and final states EXACTLY."""
+    p = str(tmp_path / f"async-{codec}-{method}.npz")
+    kw = dict(rounds=4, latency="lognormal", latency_sigma=1.0,
+              buffer_size=2, staleness_decay=0.7, uplink_codec=codec,
+              chunk_rounds=1, seed=5)
+    full = _run(fed_setup, method, "async", **kw)
+    _run(fed_setup, method, "async", checkpoint_path=p,
+         **{**kw, "rounds": 2})
+    res = _run(fed_setup, method, "async", checkpoint_path=p, resume=True,
+               **kw)
+    for rf, rr in zip(full["history"], res["history"]):
+        assert rf.train_loss == rr.train_loss
+        assert rf.accs == rr.accs
+        assert rf.sampled == rr.sampled
+    assert full["sim_times"] == res["sim_times"]
+    assert full["staleness_mean"] == res["staleness_mean"]
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), full["states"], res["states"])
+
+
+def test_async_resume_rejects_config_change(fed_setup, tmp_path):
+    p = str(tmp_path / "async-fp.npz")
+    kw = dict(rounds=2, latency="lognormal", buffer_size=2, chunk_rounds=1,
+              seed=5)
+    _run(fed_setup, "celora", "async", checkpoint_path=p, **kw)
+    with pytest.raises(ValueError, match="different run configuration"):
+        _run(fed_setup, "celora", "async", checkpoint_path=p, resume=True,
+             **{**kw, "latency_scale": 2.0})
+
+
+def test_async_config_validation(fed_setup):
+    with pytest.raises(ValueError, match="buffer_size"):
+        _run(fed_setup, "celora", "async", buffer_size=99)
+    with pytest.raises(ValueError, match="straggler"):
+        _run(fed_setup, "celora", "async", straggler_frac=0.3)
+    with pytest.raises(ValueError, match="vectorized"):
+        _run(fed_setup, "celora", "async", client_parallelism="loop")
+    with pytest.raises(ValueError, match="latency"):
+        _run(fed_setup, "celora", "async", latency="gaussian")
+    with pytest.raises(ValueError, match="staleness_decay"):
+        _run(fed_setup, "celora", "async", staleness_decay=0.0)
+
+
+# ---------------------------------------------------------------------------
+# round timing (regression: non-monotonic wall clock)
+# ---------------------------------------------------------------------------
+
+def test_round_timing_monotonic_clock(fed_setup):
+    """``wall_s`` must come from a monotonic clock: ``time.time()`` can
+    step backwards under NTP adjustment and once produced negative round
+    times.  All engines must report non-negative walls, and the runtime
+    sources must not call ``time.time()`` at all."""
+    import inspect
+
+    from repro.core import federated as fed_mod
+    from repro.launch import train as train_mod
+    for mod in (fed_mod, train_mod):
+        assert "time.time(" not in inspect.getsource(mod), \
+            f"{mod.__name__} must use time.perf_counter(), not time.time()"
+    for engine in ("eager", "scan", "async"):
+        out = _run(fed_setup, "celora_fedavg", engine, rounds=2,
+                   use_data_sim=False, use_model_sim=False)
+        assert all(r.wall_s >= 0.0 for r in out["history"])
+
+
+# ---------------------------------------------------------------------------
+# latency model
+# ---------------------------------------------------------------------------
+
+def test_latency_model_deterministic():
+    lm = sampling.LatencyModel("lognormal", scale=2.0, sigma=1.0)
+    a = lm.draw(8, wave=3, seed=7)
+    b = lm.draw(8, wave=3, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, lm.draw(8, wave=4, seed=7))
+    assert not np.array_equal(a, lm.draw(8, wave=3, seed=8))
+    assert (a > 0).all()
+
+
+def test_latency_model_kinds():
+    assert (sampling.LatencyModel("uniform", scale=3.0).draw(5, 0, 0)
+            == 3.0).all()
+    assert (sampling.LatencyModel("exp", scale=1.0).draw(64, 0, 0) > 0).all()
+    with pytest.raises(ValueError):
+        sampling.LatencyModel("gaussian")
+    with pytest.raises(ValueError):
+        sampling.LatencyModel("uniform", scale=0.0)

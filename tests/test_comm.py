@@ -39,6 +39,18 @@ def test_stacked_per_client_bytes():
     assert comm.round_comm_stacked(None, 3) == comm.RoundComm.zero()
 
 
+def test_stacked_per_client_ragged_raises():
+    """A stacked payload whose totals don't divide by the leading client
+    axis must fail loudly with the offending shapes, not with a bare
+    assert (or, under -O, silently wrong per-client accounting)."""
+    ragged = {"a": jnp.zeros((5, 4), jnp.float32),
+              "b": jnp.zeros((3, 7), jnp.float32)}
+    with pytest.raises(ValueError, match=r"ragged stacked payload.*m=5"):
+        comm.stacked_per_client_bytes(ragged)
+    with pytest.raises(ValueError, match="ragged stacked payload"):
+        comm.stacked_per_client_elems(ragged)
+
+
 def test_round_comm_payloads():
     p = {"c": jnp.zeros((4, 4), jnp.float32)}
     rc = comm.round_comm_payloads([p, p, None])

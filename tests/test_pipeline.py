@@ -121,6 +121,36 @@ def test_chunk_prefetcher_propagates_errors():
         pf.close()
 
 
+def test_chunk_prefetcher_get_after_close_raises():
+    """get() after close() must raise immediately — the producer is
+    stopped and the queue will never be fed again, so the old behavior
+    (blocking on an empty queue forever) was a deadlock."""
+    pf = client_batch.ChunkPrefetcher(lambda n: n, [1] * 4, depth=1)
+    pf.get()
+    pf.close()
+    with pytest.raises(RuntimeError, match="after close"):
+        pf.get()
+
+
+def test_chunk_prefetcher_close_while_producer_blocked():
+    """close() must terminate a producer that is blocked in _put on a full
+    queue — and keep draining until the thread actually exits (a single
+    drain races the producer's in-flight put)."""
+    import threading
+    started = threading.Event()
+
+    def produce(n):
+        started.set()
+        return np.zeros(1 << 16)       # bulky: forces queue-full blocking
+    pf = client_batch.ChunkPrefetcher(produce, [1] * 50, depth=1)
+    started.wait(timeout=5.0)
+    time.sleep(0.2)                    # let the producer block in _put
+    pf.close()
+    assert not pf._thread.is_alive()
+    with pytest.raises(RuntimeError, match="after close"):
+        pf.get()
+
+
 # ---------------------------------------------------------------------------
 # engine-level: donation safety, eval_every, wall split
 # ---------------------------------------------------------------------------
