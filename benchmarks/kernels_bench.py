@@ -82,6 +82,30 @@ def main(quick: bool = False):
     rows.append(("sdpa_blockwise_xla", t_blk,
                  f"flash_kernel_interp_max_err={fa_err:.1e}"))
 
+    # --- flash attention fwd+bwd: custom-VJP Pallas path (interpret-mode
+    # max err vs jax.grad of the materialized oracle — DESIGN.md §14)
+    from repro.kernels.flash_attention import flash_attention_ref
+    qs, ks_, vs = q[:, :128], kk[:, :128], vv[:, :128]
+    t_fwd_ref = _timeit(jax.jit(lambda *t: flash_attention_ref(
+        *t, causal=True)), qs, ks_, vs, n=5)
+    rows.append(("flash_fwd_ref_xla", t_fwd_ref,
+                 f"kernel_interp_max_err={fa_err:.1e}"))
+
+    def _loss(att):
+        return lambda a, b_, c_: jnp.sum(
+            att(a, b_, c_).astype(jnp.float32) ** 2)
+
+    grad_ref = jax.jit(jax.grad(_loss(
+        lambda *t: flash_attention_ref(*t, causal=True)), argnums=(0, 1, 2)))
+    t_bwd_ref = _timeit(grad_ref, qs, ks_, vs, n=5)
+    g_flash = jax.grad(_loss(lambda *t: flash_attention(
+        *t, causal=True, bq=64, bk=64, interpret=True)),
+        argnums=(0, 1, 2))(qs, ks_, vs)
+    fa_bwd_err = max(float(jnp.max(jnp.abs(gi - gj)))
+                     for gi, gj in zip(g_flash, grad_ref(qs, ks_, vs)))
+    rows.append(("flash_bwd_ref_xla", t_bwd_ref,
+                 f"kernel_interp_max_err={fa_bwd_err:.1e}"))
+
     # --- wkv6: chunked vs naive scan (XLA), kernel interp err
     from repro.models.rwkv import wkv_chunked, wkv_scan
     from repro.kernels.rwkv6 import wkv6

@@ -300,6 +300,7 @@ def _load_async(fed, stacked, s_model, m: int, fingerprint: dict,
         raise ValueError(f"{fed.checkpoint_path!r} is not an async-engine "
                          f"checkpoint")
     ckpt.check_fingerprint(fed.checkpoint_path, meta, fingerprint,
+                           defaults={"attn_impl": "auto"},  # pre-§14 ckpts
                            ignore=("rounds",))
     done = int(meta["rounds_done"])
     if done > fed.rounds:

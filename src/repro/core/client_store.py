@@ -470,7 +470,7 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
             ckpt.check_fingerprint(
                 fed.checkpoint_path, meta, fed_engine._fingerprint(fed),
                 defaults={"uplink_codec": "none", "eval_every": 1,
-                          "client_store": "device"},
+                          "client_store": "device", "attn_impl": "auto"},
                 ignore=("rounds",))
             start = int(meta["rounds_done"])
             if start > fed.rounds:

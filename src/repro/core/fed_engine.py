@@ -108,11 +108,14 @@ _FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
                        "sampler", "straggler_frac", "use_data_sim",
                        "use_model_sim", "cka_probes", "self_weight",
                        "pfedme_eta", "uplink_codec", "eval_every",
-                       "client_store")
+                       "client_store", "attn_impl")
 
 
 def _fingerprint(fed) -> dict:
-    return {f: getattr(fed, f) for f in _FINGERPRINT_FIELDS}
+    fp = {f: getattr(fed, f) for f in _FINGERPRINT_FIELDS}
+    if fp["attn_impl"] is None:       # direct engine calls skip run_federated's
+        fp["attn_impl"] = "auto"      # resolution; normalize for comparison
+    return fp
 
 
 def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
@@ -236,7 +239,8 @@ def _load_state(fed, stacked, s_model, m: int):
         fed.checkpoint_path, meta, _fingerprint(fed),
         defaults={"uplink_codec": "none",      # pre-codec checkpoints
                   "eval_every": 1,             # pre-§11 checkpoints
-                  "client_store": "device"},   # pre-§12 checkpoints
+                  "client_store": "device",    # pre-§12 checkpoints
+                  "attn_impl": "auto"},        # pre-§14 checkpoints
         ignore=("rounds",))
     rounds_done = int(meta["rounds_done"])
     if rounds_done > fed.rounds:

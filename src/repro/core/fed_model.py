@@ -47,8 +47,12 @@ class FedTask(NamedTuple):
     # --------------------------------------------------------------- forward
     def logits(self, adapter: dict, head: jnp.ndarray,
                tokens: jnp.ndarray) -> jnp.ndarray:
+        # attn_impl rides on cfg (forward_hidden defers to cfg.attn_impl via
+        # attention.select_impl), so every client trains through the
+        # configured backend — flash included
         hidden, _, _ = model.forward_hidden(self.cfg, self.base, adapter,
-                                            {"tokens": tokens})
+                                            {"tokens": tokens},
+                                            attn_impl=self.cfg.attn_impl)
         pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
         return pooled @ head
 
@@ -65,7 +69,8 @@ class FedTask(NamedTuple):
         ⇒ ΔW = 0, so features are adapter-independent)."""
         adapter = model.init_params(self.cfg, jax.random.key(0))["adapter"]
         hidden, _, _ = model.forward_hidden(self.cfg, self.base, adapter,
-                                            {"tokens": tokens})
+                                            {"tokens": tokens},
+                                            attn_impl=self.cfg.attn_impl)
         return jnp.mean(hidden.astype(jnp.float32), axis=1)
 
 

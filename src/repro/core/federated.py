@@ -91,6 +91,7 @@ from repro.core.fed_model import FedTask
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka, gmm, ot
 from repro.data.pipeline import Loader
+from repro.models import attention
 from repro.optim import adamw, apply_updates
 
 
@@ -143,6 +144,8 @@ class FedConfig:
     latency_sigma: float = 0.5        # async: lognormal sigma
     # --- uplink compression (repro.core.compress, DESIGN.md §10) -----------
     uplink_codec: str = "none"        # "none" | "bf16" | "int8" | "int4"
+    # --- attention backend (models.attention.select_impl, DESIGN.md §14) ---
+    attn_impl: Optional[str] = None   # None -> inherit task.cfg.attn_impl
     # --- partial participation (repro.core.sampling, DESIGN.md §8) ---------
     participation: float = 1.0        # fraction of clients sampled per round
     sampler: str = "uniform"          # "uniform" | "weighted" | "round_robin"
@@ -320,6 +323,17 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
         raise ValueError(f"straggler_frac must be in [0, 1); "
                          f"got {fed.straggler_frac}")
     assert len(client_train) == m
+    # attention backend (DESIGN.md §14): FedConfig.attn_impl overrides the
+    # task config; the resolved name lands back on task.cfg, so every
+    # compiled-program cache keyed on (base, cfg) — local fit, eval, the
+    # scan/async engines — recompiles exactly when the backend changes
+    impl = fed.attn_impl if fed.attn_impl is not None else task.cfg.attn_impl
+    if impl not in attention.IMPLS:
+        raise ValueError(f"attn_impl={impl!r}; "
+                         f"expected one of {attention.IMPLS}")
+    fed = dataclasses.replace(fed, attn_impl=impl)
+    if task.cfg.attn_impl != impl:
+        task = task._replace(cfg=task.cfg.with_overrides(attn_impl=impl))
     codec = compress.get_codec(fed.uplink_codec)  # validates the codec name
     # compression is active only when something crosses the wire; with the
     # identity codec the runtime below takes its legacy paths untouched

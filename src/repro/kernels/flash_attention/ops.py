@@ -1,4 +1,17 @@
-"""Jit'd wrapper: layout adaptation (B,S,H,hd) ⇄ (B,H,S,hd) + padding."""
+"""Jit'd wrapper: layout adaptation (B,S,H,hd) ⇄ (B,H,S,hd) + padding.
+
+``pl.pallas_call`` has no autodiff rule, so the padded kernel-layout core
+carries a ``jax.custom_vjp`` (the ``tri_lora.ops`` idiom): the forward runs
+the online-softmax kernel with ``save_lse=True`` and keeps (q, k, v, out,
+lse) as residuals; the backward recomputes probability tiles from the
+logsumexp inside the Pallas dq / dk-dv kernels
+(``flash_attention_bwd_kernel``).  Padding and layout swaps sit OUTSIDE the
+custom VJP, so their cotangents (zero-fill / slice) come from ordinary
+autodiff — padded q rows carry zero dO and therefore contribute nothing to
+dk/dv.  Gradients for all three operands are checked against ``jax.grad``
+of ``flash_attention_ref`` in tests/test_kernels.py (f32/bf16 ×
+causal/windowed × padded/unpadded × GQA).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,9 +19,34 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bwd_kernel, flash_attention_kernel)
 
 _INTERPRET_DEFAULT = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_padded(qt, kt, vt, causal, window, bq, bk, interpret):
+    """Kernel-layout core on block-divisible (B,H,S,hd) operands."""
+    return flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=interpret)
+
+
+def _flash_padded_fwd(qt, kt, vt, causal, window, bq, bk, interpret):
+    out, lse = flash_attention_kernel(qt, kt, vt, causal=causal,
+                                      window=window, bq=bq, bk=bk,
+                                      interpret=interpret, save_lse=True)
+    return out, (qt, kt, vt, out, lse)
+
+
+def _flash_padded_bwd(causal, window, bq, bk, interpret, res, g):
+    qt, kt, vt, out, lse = res
+    return flash_attention_bwd_kernel(qt, kt, vt, out, lse, g, causal=causal,
+                                      window=window, bq=bq, bk=bk,
+                                      interpret=interpret)
+
+
+_flash_padded.defvjp(_flash_padded_fwd, _flash_padded_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
@@ -17,7 +55,12 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0, bq: int = 512,
                     bk: int = 512,
                     interpret: bool | None = None) -> jnp.ndarray:
-    """Model-layout entry point: q (B,Sq,H,hd), k/v (B,Skv,K,hd)."""
+    """Model-layout entry point: q (B,Sq,H,hd), k/v (B,Skv,K,hd).
+
+    Differentiable in q, k and v — the backward runs the Pallas
+    recompute-from-logsumexp kernels (custom VJP above), so residual memory
+    stays O(S) per head instead of the O(S²) probability matrix.
+    """
     if interpret is None:
         interpret = _INTERPRET_DEFAULT
     sq = q.shape[1]
@@ -36,8 +79,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     # NOTE on padded causal rows: padded q rows attend to nothing real but
     # their outputs are sliced away; padded k cols are masked by causality
     # only when causal=True — for non-causal use, callers must pad-mask.
-    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
-                                 bq=bq, bk=bk, interpret=interpret)
+    out = _flash_padded(qt, kt, vt, causal, window, bq, bk, interpret)
     if pad_q:
         out = out[:, :, :sq]
     return jnp.swapaxes(out, 1, 2)

@@ -45,7 +45,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
                 train_layout: str = "mixed",
                 fed_bf16: bool = False,
                 microbatches: int = 1,
-                attn_impl: str = "auto",
+                attn_impl: str | None = None,
                 art_dir: str = ART) -> dict:
     t0 = time.time()
     cfg = st.shape_variant(get_config(arch), shape_name)
@@ -230,9 +230,11 @@ def main():
                     help="quantize the federated C payload to bf16")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches for train")
-    ap.add_argument("--attn-impl", default="auto",
-                    choices=["auto", "blockwise", "blockwise_cv",
-                             "blockwise_hp"])
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "ref", "blockwise", "blockwise_cv",
+                             "blockwise_hp", "flash"],
+                    help="attention backend override (default: the arch "
+                         "config's ModelConfig.attn_impl)")
     ap.add_argument("--out-dir", default=ART,
                     help="artifact root (default: <repo>/artifacts/dryrun)")
     args = ap.parse_args()

@@ -103,7 +103,7 @@ def abstract_cache(cfg: ModelConfig, shape_name: str):
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, lr: float = 1e-4,
-                    attn_impl: str = "auto",
+                    attn_impl: str | None = None,
                     microbatches: int = 1) -> Callable:
     """``microbatches > 1`` = gradient accumulation: the global batch is
     split into k sequential microbatches (lax.scan over grads), so live
@@ -149,7 +149,8 @@ def make_train_step(cfg: ModelConfig, lr: float = 1e-4,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, attn_impl: str = "auto") -> Callable:
+def make_prefill_step(cfg: ModelConfig,
+                      attn_impl: str | None = None) -> Callable:
     def prefill_step(params, batch):
         hidden, _, n_prefix = model.forward_hidden(
             cfg, params["base"], params["adapter"], batch,
@@ -174,7 +175,7 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 # ---------------------------------------------------------------------------
 
 def make_fed_round_step(cfg: ModelConfig, mesh: Mesh, lr: float = 1e-4,
-                        attn_impl: str = "auto",
+                        attn_impl: str | None = None,
                         payload_dtype=None) -> Callable:
     """One federated "micro-round" on the multi-pod mesh: each pod is one
     federated client.  Adapter/optimizer leaves carry a leading pod dim

@@ -84,7 +84,8 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         scan_prefetch: bool = True, client_store: str = "device",
         buffer_size: int = 0, async_concurrency: int = 0,
         staleness_decay: float = 1.0, latency: str = "uniform",
-        latency_scale: float = 1.0, latency_sigma: float = 0.5) -> dict:
+        latency_scale: float = 1.0, latency_sigma: float = 0.5,
+        attn_impl: str | None = None) -> dict:
     assert client_parallelism in ("loop", "vmap"), client_parallelism
     assert engine in ("eager", "scan", "async"), engine
     vectorized = client_parallelism == "vmap"
@@ -125,6 +126,14 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if attn_impl is not None:
+        # backend rides on cfg (DESIGN.md §14): every downstream loss_fn /
+        # forward_hidden call resolves it via attention.select_impl
+        from repro.models.attention import IMPLS
+        if attn_impl not in IMPLS:
+            raise ValueError(f"attn_impl={attn_impl!r}; "
+                             f"expected one of {IMPLS}")
+        cfg = cfg.with_overrides(attn_impl=attn_impl)
     key = jax.random.key(seed)
     params = model.init_params(cfg, key)
     base = params["base"]
@@ -691,8 +700,9 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
             ckpt, meta,
             {"arch": cfg.name, "method": method, "clients": clients,
              "seed": seed, "uplink_codec": codec.name,
-             "client_store": client_store},
-            defaults={"uplink_codec": "none", "client_store": "device"})
+             "client_store": client_store, "attn_impl": cfg.attn_impl},
+            defaults={"uplink_codec": "none", "client_store": "device",
+                      "attn_impl": "auto"})  # pre-§14 checkpoints
         start = int(meta["rounds_done"])
         if start > rounds:
             raise ValueError(f"checkpoint has {start} completed rounds but "
@@ -741,7 +751,8 @@ def _run_scan_lm(*, cfg, local_fit_raw, draw, stacked, plans, method: str,
                            "method": method, "engine": "scan",
                            "clients": clients, "seed": seed,
                            "uplink_codec": codec.name,
-                           "client_store": client_store})
+                           "client_store": client_store,
+                           "attn_impl": cfg.attn_impl})
         if verbose:
             print(f"rounds {c0:3d}–{c1 - 1:3d}  loss "
                   f"{hist_loss[-1]:.4f}  ({wall_s:.1f}s/round)", flush=True)
@@ -798,6 +809,12 @@ def main():
                     choices=["none", "bf16", "int8", "int4"],
                     help="quantized uplink compression with error feedback "
                          "(repro.core.compress, DESIGN.md §10)")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "ref", "blockwise", "blockwise_cv",
+                             "blockwise_hp", "flash"],
+                    help="attention backend for client training (DESIGN.md "
+                         "§14); default: the arch config's "
+                         "ModelConfig.attn_impl")
     ap.add_argument("--no-donate", action="store_true",
                     help="scan engine: disable carry buffer donation "
                          "(DESIGN.md §11)")
@@ -841,7 +858,7 @@ def main():
               buffer_size=args.buffer_size,
               async_concurrency=args.async_concurrency,
               staleness_decay=args.staleness_decay, latency=args.latency,
-              latency_scale=args.latency_scale,
+              latency_scale=args.latency_scale, attn_impl=args.attn_impl,
               latency_sigma=args.latency_sigma)
     first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.rounds} rounds")

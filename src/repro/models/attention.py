@@ -1,9 +1,11 @@
 """Attention: GQA, optional qk-norm / bias / sliding window, train + decode.
 
-The training path can either run the pure-jnp reference or the Pallas flash
-kernel (``use_flash=True``); both are numerically validated against each other
-in the kernel tests.  The decode path attends one new token against a
-(possibly ring-buffered) KV cache.
+Backends are first-class: every entry point resolves its implementation
+through :func:`select_impl` (explicit ``impl=`` kwarg > ``cfg.attn_impl`` >
+"auto") — the pure-jnp reference, the XLA blockwise variants, or the Pallas
+flash kernel (trainable via its custom VJP); all are numerically validated
+against each other in the kernel tests.  The decode path attends one new
+token against a (possibly ring-buffered) KV cache.
 """
 from __future__ import annotations
 
@@ -263,22 +265,68 @@ def blockwise_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 # ---------------------------------------------------------------------------
+# backend registry: every entry point resolves its implementation here
+# ---------------------------------------------------------------------------
+
+#: Valid values for ``ModelConfig.attn_impl`` / per-call ``impl=`` overrides.
+IMPLS = ("auto", "ref", "blockwise", "blockwise_hp", "blockwise_cv", "flash")
+
+#: "auto" self-attention: materialized-logits reference up to this length,
+#: blockwise (online-softmax) beyond it.
+AUTO_REF_MAX_SEQ = 2048
+
+#: cross-attention tiles its (Sq, Skv) logits once the product exceeds this
+#: (4M f32 entries = 16 MiB of materialized logits per head pair).
+CROSS_TILE_THRESHOLD = 4_194_304
+
+
+def select_impl(cfg: Optional[ModelConfig], seq_len: int, *,
+                impl: Optional[str] = None, kv_len: Optional[int] = None,
+                kv_valid: bool = False) -> str:
+    """Resolve the attention backend for one call site.
+
+    Precedence: explicit ``impl`` kwarg > ``cfg.attn_impl`` > "auto".  The
+    returned name is concrete (never "auto").  ``kv_len`` marks the
+    non-causal cross-attention path (tile above CROSS_TILE_THRESHOLD);
+    ``kv_valid`` marks decode/ring-cache calls whose validity masks only the
+    reference SDPA supports.
+    """
+    chosen = impl if impl is not None else (
+        cfg.attn_impl if cfg is not None else "auto")
+    if chosen not in IMPLS:
+        raise ValueError(
+            f"unknown attn_impl {chosen!r}; valid: {', '.join(IMPLS)}")
+    if kv_valid:
+        return "ref"            # only sdpa() takes kv_valid masks
+    if kv_len is not None:      # cross-attention: non-causal, Sq != Skv
+        if chosen in ("ref", "blockwise"):
+            return chosen
+        return ("blockwise" if seq_len * kv_len > CROSS_TILE_THRESHOLD
+                else "ref")
+    if chosen == "auto":
+        return "ref" if seq_len <= AUTO_REF_MAX_SEQ else "blockwise"
+    if chosen in ("blockwise_hp", "blockwise_cv") \
+            and seq_len <= AUTO_REF_MAX_SEQ:
+        return "ref"            # tiling overhead not worth it at short seq
+    return chosen
+
+
+# ---------------------------------------------------------------------------
 # block-level entry points
 # ---------------------------------------------------------------------------
 
 def self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions,
                    adapters=None, *, window: int = 0,
-                   impl: str = "auto") -> jnp.ndarray:
+                   impl: Optional[str] = None) -> jnp.ndarray:
     """impl: 'ref' (materialized logits), 'blockwise' (XLA-flash, long-seq
-    safe), 'flash' (Pallas kernel), or 'auto' (ref below 2k, else blockwise).
+    safe), 'flash' (Pallas kernel, trainable custom-VJP), or 'auto' (ref
+    below AUTO_REF_MAX_SEQ, else blockwise).  None defers to
+    ``cfg.attn_impl`` — resolution happens in :func:`select_impl`.
     """
     q, k, v = _project_qkv(cfg, p, x, adapters)
     q = _rope(cfg, q, positions)
     k = _rope(cfg, k, positions)
-    if impl == "auto":
-        impl = "ref" if q.shape[1] <= 2048 else "blockwise"
-    if impl in ("blockwise_hp", "blockwise_cv") and q.shape[1] <= 2048:
-        impl = "ref"
+    impl = select_impl(cfg, q.shape[1], impl=impl)
     if impl == "flash":
         from repro.kernels.flash_attention import ops as fa_ops
         out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
@@ -303,9 +351,11 @@ def self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions,
 
 
 def cross_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
-                    enc_out: jnp.ndarray, adapters=None) -> jnp.ndarray:
+                    enc_out: jnp.ndarray, adapters=None,
+                    *, impl: Optional[str] = None) -> jnp.ndarray:
     q, k, v = _project_qkv(cfg, p, x, adapters, kv_from=enc_out, cross=True)
-    if q.shape[1] * k.shape[1] > 4_194_304:     # long decoder seq: tile it
+    impl = select_impl(cfg, q.shape[1], impl=impl, kv_len=k.shape[1])
+    if impl == "blockwise":                     # long decoder seq: tile it
         out = blockwise_sdpa(q, k, v, causal=False)
     else:
         out = sdpa(q, k, v, causal=False)
@@ -343,6 +393,8 @@ def decode_self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     # validity: slots [0, idx] until the ring wraps, then all slots
     valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
     valid = jnp.broadcast_to(valid, (x.shape[0], ring))
+    impl = select_impl(cfg, q.shape[1], kv_valid=True)   # always "ref":
+    assert impl == "ref"                # only sdpa handles validity masks
     out = sdpa(q, k, v, causal=False, kv_valid=valid)
     b = x.shape[0]
     sc = cfg.lora_alpha / cfg.lora_rank

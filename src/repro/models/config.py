@@ -47,6 +47,8 @@ class ModelConfig:
     window: int = 0                   # sliding-window size for `swa` blocks
     local_window: int = 2048          # window for hybrid local-attn blocks
     layer_pattern: Tuple[BlockKind, ...] = ("attn",)
+    attn_impl: str = "auto"           # attention backend (attention.IMPLS);
+    #                                   resolved per call via select_impl()
 
     # --- MLP / norm --------------------------------------------------------
     mlp_type: str = "swiglu"          # swiglu | gelu

@@ -93,8 +93,10 @@ def _none_adapters_like(cfg: ModelConfig, has_groups: bool):
 
 
 def forward_hidden(cfg: ModelConfig, base: dict, adapter: dict, batch: dict,
-                   *, attn_impl: str = "auto", use_rwkv_kernel: bool = False):
-    """Embeddings → stack → final norm.  Returns (hidden (B,S',D), aux)."""
+                   *, attn_impl: str | None = None,
+                   use_rwkv_kernel: bool = False):
+    """Embeddings → stack → final norm.  Returns (hidden (B,S',D), aux).
+    ``attn_impl=None`` defers to ``cfg.attn_impl`` (attention.select_impl)."""
     tokens = batch["tokens"]
     x = layers.batch_hint(layers.embed(tokens, base["embed"]))
     positions = batch.get("positions")

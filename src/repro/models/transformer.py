@@ -102,7 +102,7 @@ def init_block(key, cfg: ModelConfig, kind: str, *, cross: bool = False,
 
 def block_apply(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
                 x: jnp.ndarray, positions, *, enc_out=None, causal=True,
-                attn_impl="auto", use_rwkv_kernel=False):
+                attn_impl=None, use_rwkv_kernel=False):
     ad = ad or {}
     nt = cfg.norm_type
     aux = jnp.zeros((), jnp.float32)
@@ -268,8 +268,10 @@ def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
 
 def run_stack(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
               x: jnp.ndarray, positions, *, enc_out=None, causal=True,
-              attn_impl="auto", use_rwkv_kernel=False):
-    """Train-time forward through the whole stack.  Returns (x, aux_sum)."""
+              attn_impl=None, use_rwkv_kernel=False):
+    """Train-time forward through the whole stack.  Returns (x, aux_sum).
+    ``attn_impl=None`` defers the backend choice to ``cfg.attn_impl``
+    (attention.select_impl)."""
     pattern = cfg.layer_pattern
     apply_kw = dict(enc_out=enc_out, causal=causal, attn_impl=attn_impl,
                     use_rwkv_kernel=use_rwkv_kernel)

@@ -134,6 +134,63 @@ def test_flash_attention_kernel(sq, h, kh, hd, window, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+# jax.grad through the flash custom VJP (Pallas dq / dk-dv recompute
+# kernels) vs jax.grad of the ref oracle, for all three operands:
+# f32/bf16 × causal/windowed/non-causal × padded/unpadded × GQA/MQA/MHA
+@pytest.mark.parametrize("sq,h,kh,hd,window,causal", [
+    (128, 4, 2, 32, 0, True),     # GQA causal, exact tiles
+    (128, 4, 4, 32, 0, True),     # MHA
+    (128, 4, 1, 32, 48, True),    # MQA + sliding window
+    (96, 8, 2, 64, 0, True),      # non-multiple seq (internal padding)
+    (100, 4, 2, 32, 24, True),    # padded + windowed
+    (256, 4, 2, 32, 96, True),    # window spanning several blocks
+    (64, 4, 4, 16, 0, False),     # non-causal (square, unpadded)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_backward(sq, h, kh, hd, window, causal, dtype):
+    b = 2
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sq, kh, hd)), dtype)
+    ct = jnp.asarray(RNG.standard_normal((b, sq, h, hd)), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              bq=32, bk=32, interpret=True)
+        return jnp.sum(out.astype(jnp.float32) * ct)
+
+    def loss_ref(q, k, v):
+        out = flash_attention_ref(q, k, v, causal=causal, window=window)
+        return jnp.sum(out.astype(jnp.float32) * ct)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for name, gi, gj in zip("qkv", gk, gr):
+        assert gi.dtype == gj.dtype
+        gj32 = np.asarray(gj, np.float32)
+        scale = max(1.0, float(np.abs(gj32).max()))
+        np.testing.assert_allclose(np.asarray(gi, np.float32), gj32,
+                                   rtol=rtol, atol=rtol * scale,
+                                   err_msg=f"d{name}")
+
+
+def test_flash_attention_kernel_non_divisible_raises():
+    """The raw kernel refuses non-block-divisible lengths with a ValueError
+    naming the offending shapes (not a bare assert that vanishes under -O);
+    the ops wrapper pads internally instead."""
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention_kernel
+    q = jnp.zeros((1, 2, 96, 16), jnp.float32)
+    k = jnp.zeros((1, 2, 128, 16), jnp.float32)
+    with pytest.raises(ValueError, match="sq=96"):
+        flash_attention_kernel(q, k, k, bq=64, bk=64, interpret=True)
+    # the wrapper pads the same shape fine
+    qm = jnp.swapaxes(q, 1, 2)                   # model layout (B,S,H,hd)
+    out = flash_attention(qm, qm, qm, bq=64, bk=64, interpret=True)
+    assert out.shape == (1, 96, 2, 16)
+
+
 # ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------
@@ -210,3 +267,45 @@ def test_decode_attention_kernel_bf16():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# federated short-seq equivalence: attn_impl="flash" trains clients through
+# the Pallas custom VJP and reproduces the blockwise history (DESIGN.md §14).
+# Lives in this module (not tier-1 in-process) because it compiles
+# interpret-mode Pallas programs — see the kernel-suite isolation note.
+# ---------------------------------------------------------------------------
+
+def test_federated_history_flash_matches_blockwise():
+    from repro.core.fed_model import FedTask
+    from repro.core.federated import FedConfig, run_federated
+    from repro.data import partition, synthetic
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="tiny-fa", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=256, rope_theta=1e4, layer_pattern=("attn",),
+                      param_dtype="float32", lora_rank=4)
+    n_classes, seq, m = 4, 16, 2
+    tr = synthetic.make_classification_data(0, 240, seq, cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 120, seq, cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), cfg, n_classes)
+
+    def hist(impl):
+        fed = FedConfig(method="celora", n_clients=m, rounds=2,
+                        local_steps=2, batch_size=4, lr=1e-2,
+                        feature_samples=32, attn_impl=impl)
+        out = run_federated(task, fed, ctrain, ctest)
+        return ([r.train_loss for r in out["history"]],
+                np.asarray([r.accs for r in out["history"]]))
+
+    loss_fl, acc_fl = hist("flash")
+    loss_bw, acc_bw = hist("blockwise")
+    np.testing.assert_allclose(loss_fl, loss_bw, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(acc_fl, acc_bw, atol=0.05)

@@ -72,3 +72,41 @@ def test_serve_generate_sampled_path():
     assert out1.shape == (2, 7)
     assert np.all(np.asarray(out1) >= 0)
     assert np.all(np.asarray(out1) < cfg.vocab_size)
+
+
+def test_steps_default_attn_impl_from_config(monkeypatch):
+    """steps.make_train_step/make_prefill_step pass attn_impl=None down the
+    stack, so the attention layer resolves the backend from
+    ModelConfig.attn_impl (DESIGN.md §14) — not a hardcoded "auto"."""
+    import jax
+    from repro.launch import steps as st
+    from repro.models import attention, model
+    from repro.models.config import get_config
+
+    from conftest import make_batch
+
+    seen = []
+    orig = attention.select_impl
+
+    def spy(cfg, seq_len, **kw):
+        out = orig(cfg, seq_len, **kw)
+        seen.append((kw.get("impl"), out))
+        return out
+
+    monkeypatch.setattr(attention, "select_impl", spy)
+    cfg = get_config("fed-100m").reduced().with_overrides(
+        attn_impl="blockwise")
+    params = model.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, b=2, s=16)
+
+    step = st.make_train_step(cfg, lr=1e-3)
+    jax.eval_shape(step, params, step.optimizer.init(params["adapter"]),
+                   batch)
+    assert seen and all(received is None for received, _ in seen)
+    assert all(resolved == "blockwise" for _, resolved in seen)
+
+    seen.clear()
+    pf = st.make_prefill_step(cfg)
+    jax.eval_shape(pf, params, {k: v for k, v in batch.items()
+                                if k != "labels"})
+    assert seen and all(s == (None, "blockwise") for s in seen)
