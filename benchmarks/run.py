@@ -47,6 +47,7 @@ def _register():
     import fed_pipeline
     import fed_scale
     import fed_scan
+    import fed_serve
     import fig5_privacy
     import fig6_alpha
     import fig8_clients
@@ -83,6 +84,8 @@ def _register():
             lambda quick: fed_async.main(["--smoke"] if quick else []),
         "fed_longseq":                            # §14 flash memory (ours)
             lambda quick: fed_longseq.main(["--quick"] if quick else []),
+        "fed_serve":                              # §15 multi-tenant (ours)
+            lambda quick: fed_serve.main(["--quick"] if quick else []),
         "roofline": _roofline,                    # §Roofline (ours)
     })
 

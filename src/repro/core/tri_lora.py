@@ -53,6 +53,25 @@ def apply_tri_lora(x: jnp.ndarray, adapter: Adapter, scaling: float) -> jnp.ndar
     return scaling * (p @ adapter["B"])
 
 
+def apply_tri_lora_grouped(x: jnp.ndarray, bank: Adapter, scaling: float,
+                           rows: jnp.ndarray) -> jnp.ndarray:
+    """Heterogeneous-batch low-rank path (DESIGN.md §15): row ``i`` of the
+    batch applies adapter ``rows[i]`` from a stacked (m, …) bank.
+
+    x (B, …, d); bank {'A': (m,d,r), 'C': (m,r,r), 'B': (m,r,k)}; rows (B,)
+    int32 — masked slots (rows < 0) read bank row 0 through a clamped index
+    but contribute an exactly-zero delta.  This is the pure-XLA counterpart
+    of the fused Pallas GEMV in :mod:`repro.kernels.decode_attention`.
+    """
+    safe = jnp.maximum(rows, 0)
+    a, c, b = bank["A"][safe], bank["C"][safe], bank["B"][safe]
+    p = jnp.einsum("b...d,bdr->b...r", x, a)
+    p = jnp.einsum("b...r,brs->b...s", p, c)
+    y = scaling * jnp.einsum("b...r,brk->b...k", p, b)
+    mask = (rows >= 0).reshape((-1,) + (1,) * (y.ndim - 1))
+    return jnp.where(mask, y, jnp.zeros((), y.dtype))
+
+
 def merge(w: jnp.ndarray, adapter: Adapter, scaling: float) -> jnp.ndarray:
     """Inference-time merge (paper eqn. 10): W_i = W + A_i·C_i·B_i."""
     return (w.astype(jnp.float32)

@@ -1,2 +1,10 @@
-from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
-from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: F401
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention,
+    grouped_decode,
+    grouped_dense,
+)
+from repro.kernels.decode_attention.ref import (  # noqa: F401
+    decode_attention_ref,
+    grouped_decode_ref,
+    grouped_gemv_ref,
+)

@@ -56,7 +56,9 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def decode_attention_kernel(q, k_cache, v_cache, idx, *, bk: int = 512,
                             interpret: bool = False):
-    """q (B,H,1,hd); k/v_cache (B,K,R,hd); idx () int32.  → (B,H,1,hd)."""
+    """q (B,H,1,hd); k/v_cache (B,K,R,hd); idx () or (B,) int32 — the newest
+    written position PER ROW (ragged; -1 = masked slot, whose output row is
+    exactly zero).  → (B,H,1,hd)."""
     b, h, _, hd = q.shape
     kh, ring = k_cache.shape[1], k_cache.shape[2]
     g = h // kh
@@ -65,13 +67,13 @@ def decode_attention_kernel(q, k_cache, v_cache, idx, *, bk: int = 512,
     n_kv = ring // bk
     grid = (b, h, n_kv)
     sm_scale = float(hd) ** -0.5
-    idx_arr = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (1,))
+    idx_arr = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
     return pl.pallas_call(
         functools.partial(_kernel, bk=bk, n_kv=n_kv, ring=ring,
                           sm_scale=sm_scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda bb, hh, ki: (0,),
+            pl.BlockSpec((1,), lambda bb, hh, ki: (bb,),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, 1, hd), lambda bb, hh, ki: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, bk, hd),

@@ -1,0 +1,110 @@
+"""Grouped heterogeneous tri-LoRA decode GEMV: one adapter per batch row.
+
+Personalized serving (DESIGN.md §15) decodes a batch where every sequence
+belongs to a different user, so every row applies a DIFFERENT tri-factorized
+(A, C, B) adapter from a stacked (m, …) bank.  Looping users (S-LoRA's
+"naive" baseline) wastes the accelerator at batch 1; materializing per-row
+ΔW = A·C·B wastes HBM.  This kernel fuses the rank-r epilogue
+
+    y[i] = x[i]·W + s·((x[i]·A[g])·C[g])·B[g],   g = idx[i]
+
+into the base x·W decode-GEMV tile loop, the same way
+``tri_lora_dx_kernel`` fuses its rank-r epilogue into the backward
+(DESIGN.md §11): per (row, N-tile) an f32 VMEM accumulator carries the
+running x·W partials over the K grid axis while a second (1, r) f32 scratch
+accumulates x·A[g]; at the last K step the tiny (x·A)·C·B epilogue is added
+in-register before the single write-back.  The adapter row is selected by a
+SCALAR-PREFETCHED ``idx`` vector — the BlockSpec index maps read
+``idx_ref[i]`` to DMA exactly one bank row's (bk, r)/(r, r)/(r, bn) tiles,
+so the (m, …) bank is never gathered or repeated in HBM (punica/S-LoRA
+shaped, via ``pltpu.PrefetchScalarGridSpec``).
+
+Masked slots (``idx[i] < 0`` — continuous batching keeps the batch shape
+static and parks finished slots) produce an EXACTLY zero output row: the
+epilogue reads bank row 0 through a clamped index (the DMA must stay in
+bounds) but the write-back selects 0 for the whole row.
+
+Grid: (B, N/bn, K/bk) — K innermost/sequential.  VMEM per step ≈
+bk + bk·bn + bk·r + r² + r·bn inputs + (bn + r) f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, w_ref, a_ref, c_ref, b_ref, o_ref,
+            acc_ref, xa_ref, *, n_k: int, scaling: float):
+    i = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # (1, bk)
+    acc_ref[...] += jnp.dot(x, w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    # running x·A[g] rides a second tiny f32 scratch over the same K pass
+    xa_ref[...] += jnp.dot(x, a_ref[0].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        p = scaling * jnp.dot(xa_ref[...], c_ref[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)   # (1, r)
+        y = acc_ref[...] + jnp.dot(p, b_ref[0].astype(jnp.float32),
+                                   preferred_element_type=jnp.float32)
+        # masked slot rows (idx < 0) are EXACTLY zero, base GEMV included
+        o_ref[...] = jnp.where(idx_ref[i] >= 0, y, 0.0).astype(o_ref.dtype)
+
+
+def grouped_tri_lora_gemv_kernel(idx: jnp.ndarray, x: jnp.ndarray,
+                                 w: jnp.ndarray, a: jnp.ndarray,
+                                 c: jnp.ndarray, b: jnp.ndarray, *,
+                                 scaling: float = 1.0, bn: int = 256,
+                                 bk: int = 512, interpret: bool = False):
+    """idx (B,) int32 (−1 = masked); x (B, K); w (K, N); bank a (m, K, r),
+    c (m, r, r), b (m, r, N) → (B, N) in x.dtype.  Exact tiling required
+    (the ops wrapper pads)."""
+    bsz, k = x.shape
+    _, n = w.shape
+    r = a.shape[-1]
+    bn, bk = min(bn, n), min(bk, k)
+    if n % bn or k % bk:
+        raise ValueError(f"grouped GEMV needs exact tiles: "
+                         f"(K={k}, N={n}) vs (bk={bk}, bn={bn})")
+    n_k = k // bk
+
+    def row(idx_ref, i):
+        # clamp keeps the prefetch DMA in bounds; the write-back masks
+        return jnp.maximum(idx_ref[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, kk, idx_ref: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, idx_ref: (kk, j)),
+            pl.BlockSpec((1, bk, r),
+                         lambda i, j, kk, idx_ref: (row(idx_ref, i), kk, 0)),
+            pl.BlockSpec((1, r, r),
+                         lambda i, j, kk, idx_ref: (row(idx_ref, i), 0, 0)),
+            pl.BlockSpec((1, r, bn),
+                         lambda i, j, kk, idx_ref: (row(idx_ref, i), 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, kk, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32),
+                        pltpu.VMEM((1, r), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, scaling=scaling),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, n), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), x, w, a, c, b)

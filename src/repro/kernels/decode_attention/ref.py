@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for single-token decode attention over a ring cache."""
+"""Pure-jnp oracles: single-token decode attention over a ring cache, and
+the grouped heterogeneous tri-LoRA decode path (DESIGN.md §15)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -8,11 +9,61 @@ from repro.models.attention import sdpa
 
 def decode_attention_ref(q, k_cache, v_cache, idx, *, ring_valid=True):
     """q (B,1,H,hd); k/v_cache (B,R,K,hd); idx: absolute position of the
-    NEWEST token already written into the cache (int32 scalar).
+    NEWEST token already written into the cache — int32 scalar, or (B,) for
+    ragged per-row positions (-1 = masked slot; its output row is zero).
 
     Valid slots: [0, idx] until the ring wraps, then all (matches
     attention.decode_self_attention's masking)."""
     ring = k_cache.shape[1]
-    valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
-    valid = jnp.broadcast_to(valid, (q.shape[0], ring))
-    return sdpa(q, k_cache, v_cache, causal=False, kv_valid=valid)
+    idxb = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (q.shape[0],))
+    valid = (jnp.arange(ring)[None, :] <= idxb[:, None]) | \
+        (idxb[:, None] >= ring)
+    out = sdpa(q, k_cache, v_cache, causal=False, kv_valid=valid)
+    # all-invalid rows would softmax uniformly over NEG_INF logits; the
+    # kernel contract says masked rows are EXACTLY zero instead
+    return jnp.where((idxb >= 0)[:, None, None, None], out,
+                     jnp.zeros((), out.dtype))
+
+
+def grouped_gemv_ref(rows, x, w, a, c, b, *, scaling: float = 1.0):
+    """Oracle for ``grouped_tri_lora_gemv_kernel``: per-row bank gather in
+    plain einsums, f32 throughout.  rows (B,) int32 (-1 = masked → exactly
+    zero output row); x (B,K); w (K,N); a (m,K,r); c (m,r,r); b (m,r,N)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    safe = jnp.maximum(rows, 0)
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    p = jnp.einsum("bk,bkr->br", xf, a[safe].astype(jnp.float32))
+    p = scaling * jnp.einsum("br,brs->bs", p, c[safe].astype(jnp.float32))
+    y = y + jnp.einsum("bs,bsn->bn", p, b[safe].astype(jnp.float32))
+    return jnp.where(rows[:, None] >= 0, y, 0.0).astype(x.dtype)
+
+
+def grouped_decode_ref(x, weights, bank, rows, pos, k_cache, v_cache, *,
+                       scaling: float = 1.0):
+    """Pure-XLA oracle for ``ops.grouped_decode`` — same signature, same
+    contract (see there).  Returns (out (B,d), k_cache, v_cache)."""
+    bsz = x.shape[0]
+    ring, kh, hd = k_cache.shape[1], k_cache.shape[2], k_cache.shape[3]
+    h = weights["wq"].shape[1] // hd
+    rows = jnp.asarray(rows, jnp.int32)
+    active = rows >= 0
+    pos = jnp.where(active, jnp.asarray(pos, jnp.int32), -1)
+
+    def gd(xin, name):
+        ad = bank[name]
+        return grouped_gemv_ref(rows, xin, weights[name], ad["A"], ad["C"],
+                                ad["B"], scaling=scaling)
+
+    q = gd(x, "wq").reshape(bsz, 1, h, hd)
+    k_new = gd(x, "wk").reshape(bsz, kh, hd)
+    v_new = gd(x, "wv").reshape(bsz, kh, hd)
+    slot = jnp.where(active, jnp.mod(pos, ring), 0)
+    wb = jnp.where(active, jnp.arange(bsz), bsz)      # OOB ⇒ dropped write
+    k_cache = k_cache.at[wb, slot].set(k_new.astype(k_cache.dtype),
+                                       mode="drop")
+    v_cache = v_cache.at[wb, slot].set(v_new.astype(v_cache.dtype),
+                                       mode="drop")
+    attn = decode_attention_ref(q, k_cache, v_cache, pos)
+    out = gd(attn.reshape(bsz, h * hd), "wo")
+    return out, k_cache, v_cache

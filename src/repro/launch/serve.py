@@ -1,20 +1,38 @@
-"""Batched serving driver: prefill + decode with merged tri-LoRA weights.
+"""Multi-tenant personalized serving driver (DESIGN.md §15).
 
   PYTHONPATH=src python -m repro.launch.serve --arch fed-100m --reduced \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16            # single-adapter path
+  PYTHONPATH=src python -m repro.launch.serve --arch fed-100m --reduced \\
+      --users 8 --requests 16 --slots 4             # request-stream path
 
-Demonstrates the inference path of paper eqn (10): per-client adapters can
-either stay factored (decode applies the low-rank path) or be merged into W.
+Two inference modes for paper eqn (10)'s per-client adapters:
+
+* :func:`generate` — the original single-adapter batched decode (adapters
+  stay factored; every row shares one adapter tree).
+* :class:`ServeEngine` — the multi-tenant path: a seeded stream of requests
+  from DISTINCT users is decoded in one continuously-batched loop, each
+  batch slot applying its own tri-LoRA row from an
+  :class:`~repro.core.adapter_bank.AdapterBank` (grouped heterogeneous
+  decode).  Finished requests free their slot for the next arrival; slot
+  reuse is safe because a reused slot restarts at position 0 and the ring
+  validity mask (``slot <= idx``) hides every stale KV entry.
+* :func:`serve_naive` — the baseline the benchmark beats: per user, merge
+  that user's adapter into the base weights (eqn. 10) and decode batch-1,
+  sequentially.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+from repro.core.adapter_bank import AdapterBank
 from repro.models import model
 from repro.models.config import get_config
 
@@ -48,6 +66,156 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+# ---------------------------------------------------------------------------
+# request stream
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    user_id: str
+    prompt: np.ndarray           # (P,) int32
+    gen: int
+
+
+def make_requests(bank: AdapterBank, n: int, *, prompt_len: int, gen: int,
+                  vocab: int, seed: int = 0) -> List[Request]:
+    """Seeded arrival order: each request draws a user from the bank and a
+    random prompt — the stream every driver/benchmark/test replays."""
+    rng = np.random.default_rng(seed)
+    users = sorted(bank.users)
+    return [Request(rid=i, user_id=users[int(rng.integers(len(users)))],
+                    prompt=rng.integers(0, vocab, (prompt_len,)).astype(
+                        np.int32),
+                    gen=gen)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# batched heterogeneous engine
+# ---------------------------------------------------------------------------
+
+def _with_positions(cache: dict, pos: jnp.ndarray) -> dict:
+    """Install host-managed per-slot positions into every cache ``idx`` leaf
+    — (q, B) for scanned layer groups, (B,) for tail blocks."""
+    flat, treedef = compat.tree_flatten_with_path(cache)
+    leaves = []
+    for path, leaf in flat:
+        last = str(getattr(path[-1], "key", getattr(path[-1], "idx",
+                                                    path[-1])))
+        if last == "idx":
+            top = str(getattr(path[0], "key", getattr(path[0], "idx",
+                                                      path[0])))
+            if top == "groups":
+                leaf = jnp.broadcast_to(pos, (np.shape(leaf)[0],)
+                                        + pos.shape)
+            else:
+                leaf = pos
+        leaves.append(leaf)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class ServeEngine:
+    """Continuous-batching decode over a stacked adapter bank.
+
+    ``slots`` concurrent sequences share one jitted decode program; every
+    step each slot applies its own bank row (grouped tri-LoRA) and advances
+    its own ring position (ragged ``idx``).  Idle slots carry row/pos -1 —
+    the masked-slot sentinel of the grouped kernels.  Greedy decode only:
+    the point is bit-replayable equivalence to the per-user oracle.
+    """
+
+    def __init__(self, cfg, base: dict, bank: AdapterBank, *, slots: int = 8,
+                 max_len: int = 128):
+        self.cfg, self.base, self.bank = cfg, base, bank
+        self.slots, self.max_len = slots, max_len
+        self._bank_dec = bank.decode_tree()
+        self._decode = jax.jit(self._step)
+
+    def _step(self, cache, tok, pos, rows):
+        cache = _with_positions(cache, pos)
+        positions = (jnp.broadcast_to(pos[:, None, None],
+                                      (pos.shape[0], 1, 3))
+                     if self.cfg.pos_type == "mrope" else pos[:, None])
+        logits, cache = model.decode_step(
+            self.cfg, self.base, self._bank_dec, cache,
+            {"token": tok, "positions": positions}, adapter_rows=rows)
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    def run(self, requests: Sequence[Request],
+            progress: bool = False) -> Dict[int, np.ndarray]:
+        """Drain the request stream; returns {rid: (P+gen,) tokens}."""
+        for r in requests:
+            need = len(r.prompt) + r.gen
+            if need > self.max_len:
+                raise ValueError(f"request {r.rid} needs {need} positions "
+                                 f"> max_len={self.max_len}")
+        queue = list(requests)
+        cache = model.init_decode_cache(self.cfg, self.slots, self.max_len)
+        active: List[Optional[Request]] = [None] * self.slots
+        emitted: Dict[int, List[int]] = {}
+        pos = np.full((self.slots,), -1, np.int32)
+        rows = np.full((self.slots,), -1, np.int32)
+        tok = np.zeros((self.slots,), np.int32)
+        done: Dict[int, np.ndarray] = {}
+
+        while queue or any(a is not None for a in active):
+            for s in range(self.slots):       # admit arrivals into free slots
+                if active[s] is None and queue:
+                    r = queue.pop(0)
+                    active[s] = r
+                    emitted[r.rid] = list(r.prompt)
+                    pos[s] = 0                # slot REUSE: ring restarts; the
+                    rows[s] = self.bank.lookup(r.user_id)   # validity mask
+                    tok[s] = int(r.prompt[0])  # (slot <= idx) hides stale KV
+            nxt, cache = self._decode(cache, jnp.asarray(tok[:, None]),
+                                      jnp.asarray(pos), jnp.asarray(rows))
+            nxt = np.asarray(nxt)
+            for s in range(self.slots):
+                r = active[s]
+                if r is None:
+                    continue
+                t = int(pos[s])
+                total = len(r.prompt) + r.gen
+                if t < len(r.prompt) - 1:     # still feeding the prompt
+                    tok[s] = int(r.prompt[t + 1])
+                else:                         # greedy continuation
+                    emitted[r.rid].append(int(nxt[s]))
+                    tok[s] = int(nxt[s])
+                pos[s] += 1
+                if len(emitted[r.rid]) >= total:
+                    done[r.rid] = np.asarray(emitted.pop(r.rid), np.int32)
+                    if progress:
+                        print(f"#   finished rid={r.rid} user={r.user_id} "
+                              f"({len(done)}/{len(requests)})")
+                    active[s] = None          # freed: next arrival reuses it
+                    pos[s], rows[s], tok[s] = -1, -1, 0
+        return done
+
+
+def serve_naive(cfg, base: dict, bank: AdapterBank,
+                requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+    """The merged-adapter baseline: per request, fold that user's adapter
+    into W (paper eqn. 10) and decode batch-1 — no cross-user batching."""
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ng, nt = model._none_adapters_like(cfg, base.get("groups") is not None)
+    none_ad = {"groups": ng, "tail": nt}
+    merged_cache: Dict[int, dict] = {}
+    out: Dict[int, np.ndarray] = {}
+    for r in requests:
+        row = bank.lookup(r.user_id)
+        if row not in merged_cache:
+            merged_cache[row] = bank.merged_base(base, row, sc)
+        params = {"base": merged_cache[row], "adapter": none_ad}
+        toks = generate(cfg, params, jnp.asarray(r.prompt[None]), r.gen)
+        out[r.rid] = np.asarray(toks[0], np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="fed-100m")
@@ -55,19 +223,44 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--users", type=int, default=0,
+                    help="multi-tenant mode: serve a seeded request stream "
+                         "from this many distinct users")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = model.init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
+
+    if args.users:                      # multi-tenant request-stream path
+        from repro.core.adapter_bank import random_bank
+        bank = random_bank(cfg, args.users, jax.random.key(args.seed))
+        reqs = make_requests(bank, args.requests,
+                             prompt_len=args.prompt_len, gen=args.gen,
+                             vocab=cfg.vocab_size, seed=args.seed)
+        eng = ServeEngine(cfg, params["base"], bank, slots=args.slots,
+                          max_len=args.prompt_len + args.gen)
+        t0 = time.perf_counter()
+        done = eng.run(reqs, progress=True)
+        dt = time.perf_counter() - t0
+        n_new = sum(r.gen for r in reqs)
+        print(f"served {len(done)} requests from {args.users} users in "
+              f"{dt:.1f}s ({n_new / max(dt, 1e-9):.1f} tok/s, "
+              f"{args.slots} slots)")
+        print("sample:", done[reqs[0].rid][-args.gen:])
+        return
+
+    rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = generate(cfg, params, prompts, args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     n_new = args.batch * args.gen
     print(f"generated {out.shape} in {dt:.1f}s "
           f"({1e3 * dt / max(n_new, 1):.1f} ms/token, batched)")

@@ -47,7 +47,8 @@ def init_attn(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
 
 
 def _project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray, adapters,
-                 *, kv_from: Optional[jnp.ndarray] = None, cross: bool = False):
+                 *, kv_from: Optional[jnp.ndarray] = None, cross: bool = False,
+                 adapter_rows: Optional[jnp.ndarray] = None):
     """Return q (B,S,H,hd), k,v (B,Skv,K,hd) — rope NOT yet applied."""
     ad = adapters or {}
     sc = cfg.lora_alpha / cfg.lora_rank
@@ -57,11 +58,16 @@ def _project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray, adapters,
     h = cfg.n_heads
     k_heads = h if cross else cfg.n_kv_heads
     q = layers.dense(x, p["wq"], bias=p.get("bq"), adapter=ad.get("wq"),
-                     lora_scaling=sc).reshape(b, s, h, cfg.hd)
+                     lora_scaling=sc,
+                     adapter_rows=adapter_rows).reshape(b, s, h, cfg.hd)
     k = layers.dense(kv_x, p["wk"], bias=p.get("bk"), adapter=ad.get("wk"),
-                     lora_scaling=sc).reshape(b, skv, k_heads, cfg.hd)
+                     lora_scaling=sc,
+                     adapter_rows=adapter_rows).reshape(b, skv, k_heads,
+                                                        cfg.hd)
     v = layers.dense(kv_x, p["wv"], bias=p.get("bv"), adapter=ad.get("wv"),
-                     lora_scaling=sc).reshape(b, skv, k_heads, cfg.hd)
+                     lora_scaling=sc,
+                     adapter_rows=adapter_rows).reshape(b, skv, k_heads,
+                                                        cfg.hd)
     if cfg.qk_norm and not cross:
         q = layers.rmsnorm(q, p["q_norm"]["scale"])
         k = layers.rmsnorm(k, p["k_norm"]["scale"])
@@ -372,35 +378,56 @@ def cross_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
 
 def decode_self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                           cache: dict, positions, adapters=None,
-                          *, window: int = 0):
-    """x: (B, 1, D).  cache: {'k','v': (B, W, K, hd), 'idx': int32 scalar}.
+                          *, window: int = 0,
+                          adapter_rows: Optional[jnp.ndarray] = None):
+    """x: (B, 1, D).  cache: {'k','v': (B, W, K, hd), 'idx': int32 scalar
+    — or (B,) for RAGGED per-row positions (DESIGN.md §15): each sequence
+    advances independently, and rows at idx -1 are masked batch slots that
+    write nothing and attend to nothing}.
 
     ``W`` is the ring size (== window for SWA blocks, == max_len otherwise).
     Keys are stored post-rope; with rotary embeddings relative offsets are
     preserved, so ring overwrite is safe for windowed attention.
+
+    ``adapter_rows`` switches the q/k/v/o adapters to grouped/bank mode —
+    ``adapters`` then carries stacked (m, …) factors per target.
     """
-    q, k_new, v_new = _project_qkv(cfg, p, x, adapters)
+    q, k_new, v_new = _project_qkv(cfg, p, x, adapters,
+                                   adapter_rows=adapter_rows)
     q = _rope(cfg, q, positions)
     k_new = _rope(cfg, k_new, positions)
 
+    b = x.shape[0]
     ring = cache["k"].shape[1]
     idx = cache["idx"]                      # absolute position of the new token
-    slot = jnp.mod(idx, ring)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    new_cache = {"k": k, "v": v, "idx": idx + 1}
-
-    # validity: slots [0, idx] until the ring wraps, then all slots
-    valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
-    valid = jnp.broadcast_to(valid, (x.shape[0], ring))
+    if jnp.ndim(idx) == 0:
+        slot = jnp.mod(idx, ring)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": k, "v": v, "idx": idx + 1}
+        # validity: slots [0, idx] until the ring wraps, then all slots
+        valid = (jnp.arange(ring)[None, :] <= idx) | (idx >= ring)
+        valid = jnp.broadcast_to(valid, (b, ring))
+    else:                                   # ragged per-row ring positions
+        active = idx >= 0
+        slot = jnp.where(active, jnp.mod(idx, ring), 0)
+        wb = jnp.where(active, jnp.arange(b), b)    # OOB ⇒ dropped write
+        k = cache["k"].at[wb, slot].set(k_new[:, 0].astype(cache["k"].dtype),
+                                        mode="drop")
+        v = cache["v"].at[wb, slot].set(v_new[:, 0].astype(cache["v"].dtype),
+                                        mode="drop")
+        new_cache = {"k": k, "v": v, "idx": jnp.where(active, idx + 1, idx)}
+        valid = (jnp.arange(ring)[None, :] <= idx[:, None]) | \
+            (idx[:, None] >= ring)
     impl = select_impl(cfg, q.shape[1], kv_valid=True)   # always "ref":
     assert impl == "ref"                # only sdpa handles validity masks
     out = sdpa(q, k, v, causal=False, kv_valid=valid)
-    b = x.shape[0]
     sc = cfg.lora_alpha / cfg.lora_rank
     ad = adapters or {}
     y = layers.dense(out.reshape(b, 1, -1), p["wo"], adapter=ad.get("wo"),
-                     lora_scaling=sc)
+                     lora_scaling=sc, adapter_rows=adapter_rows)
     return y, new_cache
 
 

@@ -23,12 +23,21 @@ from repro.core import tri_lora
 # ---------------------------------------------------------------------------
 
 def dense(x: jnp.ndarray, w: jnp.ndarray, *, bias: Optional[jnp.ndarray] = None,
-          adapter=None, lora_scaling: float = 1.0) -> jnp.ndarray:
+          adapter=None, lora_scaling: float = 1.0,
+          adapter_rows: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """``adapter_rows`` switches the adapter to grouped/bank mode
+    (DESIGN.md §15): ``adapter`` then holds STACKED (m, …) factors and each
+    batch row ``i`` applies bank row ``adapter_rows[i]`` (-1 = no delta)."""
     y = x @ w
     if bias is not None:
         y = y + bias
     if adapter is not None:
-        y = y + tri_lora.apply_tri_lora(x, adapter, lora_scaling).astype(y.dtype)
+        if adapter_rows is not None:
+            delta = tri_lora.apply_tri_lora_grouped(x, adapter, lora_scaling,
+                                                    adapter_rows)
+        else:
+            delta = tri_lora.apply_tri_lora(x, adapter, lora_scaling)
+        y = y + delta.astype(y.dtype)
     return y
 
 
@@ -228,20 +237,18 @@ def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
 
 
 def mlp(x: jnp.ndarray, params: dict, mlp_type: str, *, adapters=None,
-        lora_scaling: float = 1.0) -> jnp.ndarray:
+        lora_scaling: float = 1.0,
+        adapter_rows: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     ad = adapters or {}
+    kw = dict(lora_scaling=lora_scaling, adapter_rows=adapter_rows)
     if mlp_type == "swiglu":
-        g = dense(x, params["w_gate"], adapter=ad.get("w_gate"),
-                  lora_scaling=lora_scaling)
-        u = dense(x, params["w_up"], adapter=ad.get("w_up"),
-                  lora_scaling=lora_scaling)
+        g = dense(x, params["w_gate"], adapter=ad.get("w_gate"), **kw)
+        u = dense(x, params["w_up"], adapter=ad.get("w_up"), **kw)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-        return dense(h, params["w_down"], adapter=ad.get("w_down"),
-                     lora_scaling=lora_scaling)
-    h = dense(x, params["w_in"], adapter=ad.get("w_in"), lora_scaling=lora_scaling)
+        return dense(h, params["w_down"], adapter=ad.get("w_down"), **kw)
+    h = dense(x, params["w_in"], adapter=ad.get("w_in"), **kw)
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    return dense(h, params["w_out"], adapter=ad.get("w_out"),
-                 lora_scaling=lora_scaling)
+    return dense(h, params["w_out"], adapter=ad.get("w_out"), **kw)
 
 
 # ---------------------------------------------------------------------------

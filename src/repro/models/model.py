@@ -191,9 +191,14 @@ def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
 
 
 def decode_step(cfg: ModelConfig, base: dict, adapter: dict, cache: dict,
-                batch: dict, pad_vocab: bool = False) -> tuple[jnp.ndarray, dict]:
+                batch: dict, pad_vocab: bool = False,
+                adapter_rows=None) -> tuple[jnp.ndarray, dict]:
     """One new token against the cache.  Returns (logits (B,1,V), new cache).
-    ``pad_vocab`` keeps the padded (shardable) vocab dim — distributed path."""
+    ``pad_vocab`` keeps the padded (shardable) vocab dim — distributed path.
+    ``adapter_rows`` (B,) int32 switches ``adapter`` to a stacked bank
+    (``AdapterBank.decode_tree()``): each batch row applies its own adapter
+    row, and cache ``idx`` leaves must be per-row (B,) vectors (ragged
+    decode, DESIGN.md §15)."""
     token = batch["token"]
     positions = batch["positions"]
     x = layers.batch_hint(layers.embed(token, base["embed"]))
@@ -202,7 +207,8 @@ def decode_step(cfg: ModelConfig, base: dict, adapter: dict, cache: dict,
         x = x + jnp.take(base["pos_embed"], pos_idx, axis=0)
     x, new_g, new_t = transformer.run_stack_decode(
         cfg, base["groups"], base["tail"], adapter["groups"], adapter["tail"],
-        cache["groups"], cache["tail"], x, positions)
+        cache["groups"], cache["tail"], x, positions,
+        adapter_rows=adapter_rows)
     x = layers.norm(x, base["final_norm"], cfg.norm_type)
     logits = layers.unembed(x, base["embed"], cfg.vocab_size)
     if not pad_vocab and cfg.padded_vocab != cfg.vocab_size:

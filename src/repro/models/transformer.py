@@ -173,7 +173,8 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
 
 
 def block_decode(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
-                 cache: dict, x: jnp.ndarray, positions):
+                 cache: dict, x: jnp.ndarray, positions,
+                 adapter_rows: Optional[jnp.ndarray] = None):
     ad = ad or {}
     nt = cfg.norm_type
     if kind in ("attn", "swa"):
@@ -181,7 +182,8 @@ def block_decode(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
         h = layers.norm(x, p["ln1"], nt)
         y, kv = attention.decode_self_attention(
             cfg, p["attn"], h, {k: cache[k] for k in ("k", "v", "idx")},
-            positions, ad.get("attn"), window=window)
+            positions, ad.get("attn"), window=window,
+            adapter_rows=adapter_rows)
         x = x + y
         new_cache = dict(kv)
         if "xattn" in p:
@@ -197,8 +199,13 @@ def block_decode(cfg: ModelConfig, kind: str, p: dict, ad: Optional[dict],
             y, _ = moe.moe_mlp(cfg, p["moe"], h)
         else:
             y = layers.mlp(h, p["mlp"], cfg.mlp_type, adapters=ad.get("mlp"),
-                           lora_scaling=cfg.lora_alpha / cfg.lora_rank)
+                           lora_scaling=cfg.lora_alpha / cfg.lora_rank,
+                           adapter_rows=adapter_rows)
         return x + y, new_cache
+    if adapter_rows is not None:
+        raise NotImplementedError(
+            f"grouped adapter banks (DESIGN.md §15) only support attention "
+            f"blocks; got layer kind {kind!r}")
     if kind == "rwkv6":
         h = layers.norm(x, p["ln1"], nt)
         y, tm = rwkv.time_mix(cfg, p["tm"], h, cache["tm"], ad.get("tm"))
@@ -300,8 +307,14 @@ def run_stack(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
 
 
 def run_stack_decode(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
-                     groups_cache, tail_cache, x: jnp.ndarray, positions):
-    """One-token decode through the stack; returns (x, new caches)."""
+                     groups_cache, tail_cache, x: jnp.ndarray, positions,
+                     adapter_rows=None):
+    """One-token decode through the stack; returns (x, new caches).
+
+    With ``adapter_rows`` (B,) the adapter trees carry a stacked bank axis
+    — groups leaves (q, m, …), tail leaves (m, …), see
+    ``adapter_bank.AdapterBank.decode_tree`` — and each batch row applies
+    its own bank row (DESIGN.md §15)."""
     pattern = cfg.layer_pattern
 
     def group_fn(h, scanned):
@@ -309,7 +322,8 @@ def run_stack_decode(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
         new_c = {}
         for i, kind in enumerate(pattern):
             h, new_c[str(i)] = block_decode(cfg, kind, gp[str(i)], gad[str(i)],
-                                            gc[str(i)], h, positions)
+                                            gc[str(i)], h, positions,
+                                            adapter_rows=adapter_rows)
         return h, new_c
 
     new_groups_cache = None
@@ -320,6 +334,6 @@ def run_stack_decode(cfg: ModelConfig, groups_p, tail_p, groups_ad, tail_ad,
     new_tail = []
     for i, kind in enumerate(rem):
         x, c = block_decode(cfg, kind, tail_p[i], tail_ad[i], tail_cache[i],
-                            x, positions)
+                            x, positions, adapter_rows=adapter_rows)
         new_tail.append(c)
     return x, new_groups_cache, tuple(new_tail)

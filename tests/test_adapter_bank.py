@@ -1,0 +1,146 @@
+"""Adapter-bank export (repro.core.adapter_bank, DESIGN.md §15).
+
+Contract: every federated checkpoint — whichever ``client_store`` backend
+wrote it — exports the SAME stacked (m, …) tri-LoRA bank; a bank row
+decoded factored (x·W + s·x·A·C·B) is token-for-token the row merged into
+W (paper eqn. 10); and non-federated / pre-§15 checkpoints are rejected
+with a clear ``ValueError`` instead of producing a garbage bank.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import adapter_bank, tri_lora
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+from repro.launch.serve import generate
+from repro.models import model
+
+STORES = ("device", "sharded", "host")
+
+
+@pytest.fixture(scope="module")
+def fed_ckpts(tiny_cfg, tmp_path_factory):
+    """One short federated run per client-store backend, checkpointed."""
+    n_classes, seq, m = 4, 16, 4
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    root = tmp_path_factory.mktemp("bank_ckpts")
+    paths = {}
+    for store in STORES:
+        p = str(root / f"{store}.npz")
+        fed = FedConfig(method="celora", n_clients=m, rounds=2,
+                        local_steps=2, batch_size=8, lr=1e-2, engine="scan",
+                        client_store=store, chunk_rounds=2,
+                        use_data_sim=False, cka_probes=8,
+                        checkpoint_path=p)
+        run_federated(task, fed, ctrain, ctest)
+        paths[store] = p
+    return task, m, paths
+
+
+def test_export_identical_across_stores(fed_ckpts):
+    """device / sharded / host checkpoints hold the same stacked adapter
+    subtree — the bank is a function of the run, not of the store."""
+    task, m, paths = fed_ckpts
+    banks = {s: adapter_bank.export_bank(p) for s, p in paths.items()}
+    for s in STORES:
+        b = banks[s]
+        assert b.n_clients == m
+        assert b.rank == task.cfg.lora_rank
+        assert sorted(b.users) == [f"client-{i}" for i in range(m)]
+    ref = banks["device"]
+    for s in ("sharded", "host"):
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=5e-4), ref.tree, banks[s].tree)
+
+
+def test_exported_bank_is_trained_and_distinct(fed_ckpts):
+    """Training must have moved B off its zero init (else every serving
+    equivalence below is vacuous) and rows must differ across clients."""
+    _, m, paths = fed_ckpts
+    bank = adapter_bank.export_bank(paths["device"])
+    leaves = [a for a in jax.tree.leaves(bank.tree,
+                                         is_leaf=tri_lora.is_adapter)
+              if tri_lora.is_adapter(a)]
+    assert leaves and all(float(np.abs(ad["B"]).max()) > 0 for ad in leaves)
+    r0 = jax.tree.leaves(bank.row(0))
+    r1 = jax.tree.leaves(bank.row(1))
+    assert any(not np.allclose(a, b) for a, b in zip(r0, r1))
+
+
+def test_merged_matches_factored_decode_per_row(fed_ckpts):
+    """Eqn. 10 both ways: folding row i into W and decoding with a no-op
+    adapter emits the same greedy tokens as keeping row i factored."""
+    task, m, paths = fed_ckpts
+    cfg = task.cfg
+    bank = adapter_bank.export_bank(paths["device"])
+    sc = cfg.lora_alpha / cfg.lora_rank
+    ng, nt = model._none_adapters_like(cfg, task.base.get("groups")
+                                       is not None)
+    rng = np.random.default_rng(3)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 3)), jnp.int32)
+    for i in range(m):
+        factored = generate(cfg, {"base": task.base, "adapter": bank.row(i)},
+                            prompts, 4)
+        merged = generate(cfg, {"base": bank.merged_base(task.base, i, sc),
+                                "adapter": {"groups": ng, "tail": nt}},
+                          prompts, 4)
+        np.testing.assert_array_equal(
+            np.asarray(factored), np.asarray(merged),
+            err_msg=f"merged-W decode diverged from factored on bank row {i}")
+
+
+def test_lookup_and_rows(fed_ckpts):
+    _, m, paths = fed_ckpts
+    bank = adapter_bank.export_bank(paths["device"],
+                                    user_ids=[f"u{i}" for i in range(m)])
+    assert bank.lookup("u2") == 2
+    with pytest.raises(KeyError, match="no adapter bank row"):
+        bank.lookup("nobody")
+    np.testing.assert_array_equal(np.asarray(bank.rows(["u1", None, "u0"])),
+                                  [1, -1, 0])
+    with pytest.raises(IndexError):
+        bank.row(m)
+    with pytest.raises(ValueError, match="user_ids"):
+        adapter_bank.export_bank(paths["device"], user_ids=["only-one"])
+
+
+def test_doctored_checkpoints_rejected(fed_ckpts, tmp_path):
+    """Pre-§15 / non-federated checkpoints fail loudly, never silently."""
+    _, _, paths = fed_ckpts
+    sub = ckpt.load_subtree(paths["device"], "state/adapter")
+
+    no_meta = str(tmp_path / "no_meta.npz")        # metadata lost entirely
+    ckpt.save(no_meta, {"state": {"adapter": sub}})
+    with pytest.raises(ValueError, match="n_clients"):
+        adapter_bank.export_bank(no_meta)
+
+    pre15 = str(tmp_path / "pre15.npz")            # metadata w/o n_clients
+    ckpt.save(pre15, {"state": {"adapter": sub}},
+              metadata={"rounds_done": 2, "engine": "scan"})
+    with pytest.raises(ValueError, match="n_clients"):
+        adapter_bank.export_bank(pre15)
+
+    empty = str(tmp_path / "empty.npz")            # no adapter subtree
+    ckpt.save(empty, {"state": {"loss": np.zeros(2, np.float32)}},
+              metadata={"n_clients": 4})
+    with pytest.raises(ValueError, match="state/adapter"):
+        adapter_bank.export_bank(empty)
+
+    stale = str(tmp_path / "stale.npz")            # wrong stacked axis
+    ckpt.save(stale, {"state": {"adapter": sub}}, metadata={"n_clients": 7})
+    with pytest.raises(ValueError, match="n_clients=7"):
+        adapter_bank.export_bank(stale)

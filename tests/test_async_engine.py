@@ -233,8 +233,9 @@ def test_round_timing_monotonic_clock(fed_setup):
     import inspect
 
     from repro.core import federated as fed_mod
+    from repro.launch import serve as serve_mod
     from repro.launch import train as train_mod
-    for mod in (fed_mod, train_mod):
+    for mod in (fed_mod, train_mod, serve_mod):
         assert "time.time(" not in inspect.getsource(mod), \
             f"{mod.__name__} must use time.perf_counter(), not time.time()"
     for engine in ("eager", "scan", "async"):

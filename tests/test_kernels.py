@@ -309,3 +309,92 @@ def test_federated_history_flash_matches_blockwise():
     loss_bw, acc_bw = hist("blockwise")
     np.testing.assert_allclose(loss_fl, loss_bw, rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(acc_fl, acc_bw, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# grouped heterogeneous tri-LoRA decode (DESIGN.md §15): every batch row
+# applies its OWN (A, C, B) bank row via scalar-prefetch indexing; row -1 is
+# the masked-slot sentinel (output exactly zero, cache row untouched).
+# ---------------------------------------------------------------------------
+
+from repro.kernels.decode_attention import (  # noqa: E402
+    grouped_decode, grouped_decode_ref, grouped_dense, grouped_gemv_ref)
+
+
+def _rand_bank(m, k, n, r, dtype):
+    """Stacked (A, C, B) with randomized B — fresh-init B=0 would make the
+    epilogue a no-op and hide indexing bugs."""
+    return (jnp.asarray(RNG.standard_normal((m, k, r)) * 0.2, dtype),
+            jnp.asarray(RNG.standard_normal((m, r, r)) * 0.2, dtype),
+            jnp.asarray(RNG.standard_normal((m, r, n)) * 0.2, dtype))
+
+
+@pytest.mark.parametrize("k,n", [(128, 128),   # exact (bk, bn) tiles
+                                 (100, 70)])   # pads both axes
+@pytest.mark.parametrize("r", [2, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemv_kernel(k, n, r, dtype):
+    m = 3
+    x = jnp.asarray(RNG.standard_normal((5, k)), dtype)
+    w = jnp.asarray(RNG.standard_normal((k, n)) * 0.05, dtype)
+    a, c, b = _rand_bank(m, k, n, r, dtype)
+    rows = jnp.asarray([0, 2, -1, 1, 2], jnp.int32)  # dup row + masked slot
+    out = grouped_dense(rows, x, w, a, c, b, scaling=2.0, bn=64, bk=64,
+                        interpret=True)
+    ref = grouped_gemv_ref(rows, x, w, a, c, b, scaling=2.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    assert np.all(np.asarray(out, np.float32)[2] == 0.0)
+
+
+@pytest.mark.parametrize("ring", [64, 80])     # exact vs padded (bk=32) ring
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_idx(ring, dtype):
+    b, h, kh, hd = 4, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, ring, kh, hd)), dtype)
+    # per-row: partial ring / wrapped ring / masked slot / exactly full
+    idx = jnp.asarray([5, ring + 40, -1, ring - 1], jnp.int32)
+    out = decode_attention(q, k, v, idx, bk=32, interpret=True)
+    ref = decode_attention_ref(q, k, v, idx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    assert np.all(np.asarray(out, np.float32)[2] == 0.0)
+
+
+@pytest.mark.parametrize("r", [2, 4, 8])
+@pytest.mark.parametrize("h,kh", [(4, 2), (4, 4), (4, 1)])  # GQA / MHA / MQA
+@pytest.mark.parametrize("hd", [32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ring", [32, 48])     # pow2-full vs non-pow2 ring
+def test_grouped_decode_kernel(r, h, kh, hd, dtype, ring):
+    """Full composite (q/k/v grouped GEMVs → ragged cache write → flash
+    decode → grouped o-GEMV) vs the pure-XLA oracle, max scaled error."""
+    m, bsz, d = 3, 4, 48
+    shapes = {"wq": (d, h * hd), "wk": (d, kh * hd),
+              "wv": (d, kh * hd), "wo": (h * hd, d)}
+    w = {k_: jnp.asarray(RNG.standard_normal(s) * 0.1, dtype)
+         for k_, s in shapes.items()}
+    bank = {k_: dict(zip("ACB", _rand_bank(m, *shapes[k_], r, dtype)))
+            for k_ in shapes}
+    x = jnp.asarray(RNG.standard_normal((bsz, d)), dtype)
+    kc = jnp.asarray(RNG.standard_normal((bsz, ring, kh, hd)), dtype)
+    vc = jnp.asarray(RNG.standard_normal((bsz, ring, kh, hd)), dtype)
+    rows = jnp.asarray([0, 2, -1, 1], jnp.int32)
+    pos = jnp.asarray([3, ring + 5, -1, 0], jnp.int32)
+    out, ko, vo = grouped_decode(x, w, bank, rows, pos, kc, vc,
+                                 scaling=2.0, interpret=True)
+    ref, kr, vr = grouped_decode_ref(x, w, bank, rows, pos, kc, vc,
+                                     scaling=2.0)
+    o32, r32 = np.asarray(out, np.float32), np.asarray(ref, np.float32)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    scale = max(1.0, float(np.abs(r32).max()))
+    np.testing.assert_allclose(o32, r32, rtol=rtol, atol=rtol * scale)
+    np.testing.assert_allclose(np.asarray(ko, np.float32),
+                               np.asarray(kr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(vo, np.float32),
+                               np.asarray(vr, np.float32), **_tol(dtype))
+    assert np.all(o32[2] == 0.0)                 # masked row exactly zero
+    np.testing.assert_array_equal(np.asarray(ko)[2], np.asarray(kc)[2])
+    np.testing.assert_array_equal(np.asarray(vo)[2], np.asarray(vc)[2])
