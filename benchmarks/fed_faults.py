@@ -1,0 +1,172 @@
+"""Fault tolerance: convergence cost of a faulty uplink under admission
+control (DESIGN.md §16).
+
+Cross-device federated runs lose uplinks (devices crash, transit drops)
+and receive mangled ones (NaN/Inf payloads, divergent fits).  The §16
+runtime handles both with a seeded :class:`~repro.core.faults.FaultModel`
+and a server-side admission gate; this benchmark prices what a realistic
+storm costs in CONVERGENCE (rounds to a target accuracy) rather than in
+wall time — a lost round's information simply arrives later, so the
+bound worth enforcing is rounds-to-target, not throughput.
+
+Three scan-engine runs on the same seeded data:
+
+* ``clean``     — fault-free baseline (legacy trace).
+* ``lossy``     — uplink loss at ``FAULT_LOSS`` with the admission gate
+                  on; must reach 98% of the clean run's best accuracy
+                  within ``ROUNDS_TO_TARGET_MAX ×`` the clean rounds.
+* ``corrupt``   — NaN corruption at ``FAULT_CORRUPT`` with the gate on;
+                  the assertion here is SURVIVAL: the history and final
+                  states stay finite and the gate visibly rejects rows.
+
+Usage:  PYTHONPATH=src python benchmarks/fed_faults.py [--quick] [--json F]
+
+Prints CSV (run,rounds,mean_acc,best_acc,rounds_to_target,rejected)
+plus the bound check; the full (non ``--quick``) run asserts the
+rounds-to-target bound.  ``--smoke`` runs the CI-sized checks — the
+admission gate is inert on healthy traffic (history allclose to the
+legacy scan run, zero rejections) and a NaN storm survives with finite
+metrics — and writes a JSON artifact (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from fed_scan import bench_setup  # noqa: E402
+from repro.core.federated import FedConfig, run_federated  # noqa: E402
+
+FAULT_LOSS = 0.2             # the ISSUE's measured uplink-loss regime
+FAULT_CORRUPT = 0.2          # NaN-corruption survival regime
+ROUNDS_TO_TARGET_MAX = 1.5   # lossy may need at most 1.5x clean's rounds
+SEED = 0
+
+
+def _common(m: int, rounds: int) -> dict:
+    return dict(method="celora", n_clients=m, rounds=rounds, local_steps=1,
+                batch_size=2, lr=1e-2, seed=SEED, use_data_sim=False,
+                cka_probes=8, client_parallelism="vmap", engine="scan",
+                chunk_rounds=min(5, rounds))
+
+
+def run_one(task, ctrain, ctest, *, m, rounds, **fault_kw) -> dict:
+    fed = FedConfig(**_common(m, rounds), **fault_kw)
+    out = run_federated(task, fed, ctrain, ctest)
+    accs = [float(np.mean(r.accs)) for r in out["history"]]
+    finite = (all(np.isfinite(r.train_loss) and np.all(np.isfinite(r.accs))
+                  for r in out["history"])
+              and all(bool(np.all(np.isfinite(np.asarray(l))))
+                      for s in out["states"] for l in jax.tree.leaves(s)))
+    return {"rounds": rounds, "mean_acc": float(out["mean_acc"]),
+            "best_acc": max(accs), "acc_history": accs,
+            "rejected": sum(len(r.rejected) for r in out["history"]),
+            "failed": sum(len(r.failed) for r in out["history"]),
+            "finite": finite}
+
+
+def rounds_to_target(acc_history: list[float], target: float) -> int | None:
+    """1-based first round whose mean accuracy reaches ``target``."""
+    for i, a in enumerate(acc_history):
+        if a >= target:
+            return i + 1
+    return None
+
+
+def smoke(json_path: str | None) -> dict:
+    """CI smoke: gate inert on healthy traffic; NaN storm survives."""
+    m, rounds = 6, 3
+    task, ctrain, ctest = bench_setup(m)
+    ref = run_one(task, ctrain, ctest, m=m, rounds=rounds)
+    adm = run_one(task, ctrain, ctest, m=m, rounds=rounds, admission="norm")
+    np.testing.assert_allclose(adm["acc_history"], ref["acc_history"],
+                               atol=1e-3)
+    assert adm["rejected"] == 0
+    storm = run_one(task, ctrain, ctest, m=m, rounds=rounds,
+                    fault_corrupt=0.5, fault_corrupt_mode="nan",
+                    admission="norm")
+    assert storm["finite"], "NaN corruption leaked into the history"
+    assert storm["rejected"] > 0, "storm never fired"
+    print(f"# fed_faults --smoke: admission gate inert on healthy traffic "
+          f"(allclose to scan, 0 rejections); NaN storm at 0.5 rejected "
+          f"{storm['rejected']} uplinks and stayed finite "
+          f"({rounds} rounds, m={m})")
+    report = {"mode": "smoke", "m": m, "rounds": rounds,
+              "clean_acc": ref["acc_history"],
+              "admission_acc": adm["acc_history"],
+              "storm_rejected": storm["rejected"],
+              "storm_finite": storm["finite"],
+              "storm_acc": storm["acc_history"]}
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {json_path}")
+    return report
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="F")
+    a = ap.parse_args(argv)
+    if a.smoke:
+        return smoke(a.json)
+
+    m = 12 if a.quick else 24
+    rounds = 6 if a.quick else 12
+    lossy_rounds = math.ceil(ROUNDS_TO_TARGET_MAX * rounds)
+    task, ctrain, ctest = bench_setup(m)
+
+    print(f"# fed_faults — §16 storm cost, m={m}, loss={FAULT_LOSS}, "
+          f"corrupt={FAULT_CORRUPT}, admission=norm, scan engine")
+    clean = run_one(task, ctrain, ctest, m=m, rounds=rounds)
+    lossy = run_one(task, ctrain, ctest, m=m, rounds=lossy_rounds,
+                    fault_loss=FAULT_LOSS, admission="norm")
+    corrupt = run_one(task, ctrain, ctest, m=m, rounds=rounds,
+                      fault_corrupt=FAULT_CORRUPT, fault_corrupt_mode="nan",
+                      admission="norm")
+
+    target = 0.98 * clean["best_acc"]
+    rtt = {name: rounds_to_target(r["acc_history"], target)
+           for name, r in (("clean", clean), ("lossy", lossy),
+                           ("corrupt", corrupt))}
+
+    print("run,rounds,mean_acc,best_acc,rounds_to_target,rejected,failed")
+    for name, r in (("clean", clean), ("lossy", lossy),
+                    ("corrupt", corrupt)):
+        print(f"{name},{r['rounds']},{r['mean_acc']:.4f},"
+              f"{r['best_acc']:.4f},{rtt[name]},{r['rejected']},"
+              f"{r['failed']}")
+    print(f"# rounds to target acc {target:.4f}: clean={rtt['clean']} "
+          f"lossy={rtt['lossy']} (bound {ROUNDS_TO_TARGET_MAX}x)")
+    print(f"# corrupt run finite: {corrupt['finite']}, "
+          f"rejected {corrupt['rejected']} uplinks")
+
+    report = {"m": m, "fault_loss": FAULT_LOSS,
+              "fault_corrupt": FAULT_CORRUPT, "target_acc": target,
+              "rounds_to_target": rtt, "clean": clean, "lossy": lossy,
+              "corrupt": corrupt}
+    if a.json:
+        Path(a.json).write_text(json.dumps(report, indent=2))
+        print(f"# wrote {a.json}")
+    assert corrupt["finite"], "NaN corruption leaked into the history"
+    if not a.quick:
+        assert rtt["clean"] is not None and rtt["lossy"] is not None, (
+            f"target accuracy {target:.4f} not reached "
+            f"(clean={rtt['clean']}, lossy={rtt['lossy']})")
+        assert rtt["lossy"] <= ROUNDS_TO_TARGET_MAX * rtt["clean"], (
+            f"lossy needed {rtt['lossy']} rounds to target vs clean "
+            f"{rtt['clean']} (> {ROUNDS_TO_TARGET_MAX}x)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

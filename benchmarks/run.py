@@ -42,6 +42,7 @@ def _register():
     import fed_cohort
     import fed_comm
     import fed_compress
+    import fed_faults
     import fed_longseq
     import fed_partial
     import fed_pipeline
@@ -82,6 +83,8 @@ def _register():
             lambda quick: fed_compress.main(["--quick"] if quick else []),
         "fed_async":                              # §13 async buffered (ours)
             lambda quick: fed_async.main(["--smoke"] if quick else []),
+        "fed_faults":                             # §16 fault storms (ours)
+            lambda quick: fed_faults.main(["--smoke"] if quick else []),
         "fed_longseq":                            # §14 flash memory (ours)
             lambda quick: fed_longseq.main(["--quick"] if quick else []),
         "fed_serve":                              # §15 multi-tenant (ours)

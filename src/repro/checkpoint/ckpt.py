@@ -16,6 +16,8 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -23,6 +25,51 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+
+
+def _crc_of(items: dict) -> int:
+    """Content checksum over key names + raw array bytes, key-sorted so it
+    is independent of insertion/zip member order."""
+    crc = 0
+    for k in sorted(items):
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(items[k]).tobytes(), crc)
+    return crc
+
+
+def _open(path: str):
+    """``np.load`` with truncation/bit-rot mapped to a clear ValueError
+    (a half-written or corrupted .npz otherwise surfaces as an opaque
+    BadZipFile/EOFError deep inside numpy)."""
+    try:
+        return np.load(path)
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise ValueError(f"checkpoint {path!r} is unreadable — truncated "
+                         f"or corrupted ({e})") from e
+
+
+def verify(path: str) -> None:
+    """Recompute the stored content checksum; raise ``ValueError`` when the
+    file is corrupted (bit rot, doctoring, partial write).  Checkpoints
+    written before the checksum existed pass unverified."""
+    with _open(path) as data:
+        try:
+            if "__checksum__" not in data:
+                return
+            stored = int(data["__checksum__"])
+            items = {k: data[k] for k in data.files if k != "__checksum__"}
+        except (zlib.error, zipfile.BadZipFile, EOFError, OSError,
+                ValueError) as e:
+            raise ValueError(f"checkpoint {path!r} is unreadable — "
+                             f"truncated or corrupted ({e})") from e
+    got = _crc_of(items)
+    if got != stored:
+        raise ValueError(
+            f"checkpoint {path!r} failed its content checksum "
+            f"(stored {stored:#010x}, recomputed {got:#010x}) — the file "
+            f"was corrupted or modified after it was written")
 
 
 def _flatten(tree: Any):
@@ -52,6 +99,7 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     if metadata:
         packed["__meta__"] = np.frombuffer(
             json.dumps(metadata).encode(), np.uint8)
+    packed["__checksum__"] = np.asarray(_crc_of(packed), np.uint32)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     # write through the OPEN tmp file descriptor: np.savez(filename) appends
     # ".npz" to names that lack it, which would strand the mkstemp file and
@@ -79,8 +127,13 @@ def restore(path: str, like: Any, *, as_numpy: bool = False) -> Any:
     instead of device-putting them — the host-backed client store restores
     a whole population this way, so the device never sees more than the
     active cohort (DESIGN.md §12).
+
+    The file's content checksum (written by :func:`save`) is verified
+    first — a truncated or bit-rotted checkpoint fails loudly here rather
+    than resuming a silently-wrong run.
     """
-    with np.load(path) as data:
+    verify(path)
+    with _open(path) as data:
         dtypes = json.loads(bytes(data["__dtypes__"]).decode())
         flat_like, treedef = compat.tree_flatten_with_path(like)
         leaves = []
@@ -128,7 +181,7 @@ def load_subtree(path: str, prefix: str) -> Any:
     is stored under the prefix."""
     out: dict = {}
     pre = prefix.rstrip("/") + "/"
-    with np.load(path) as data:
+    with _open(path) as data:
         dtypes = json.loads(bytes(data["__dtypes__"]).decode())
         for key in data.files:
             if key.startswith("__") or not key.startswith(pre):
@@ -145,7 +198,7 @@ def load_subtree(path: str, prefix: str) -> Any:
 
 
 def metadata(path: str) -> dict:
-    with np.load(path) as data:
+    with _open(path) as data:
         if "__meta__" in data:
             return json.loads(bytes(data["__meta__"]).decode())
     return {}

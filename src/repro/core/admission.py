@@ -1,0 +1,121 @@
+"""Server-side uplink admission control (DESIGN.md §16).
+
+Every decoded uplink passes a jittable validator before it may touch the
+aggregate: a finite check (no NaN/Inf anywhere in the row) plus a
+norm-vs-running-median gate (reject rows whose L2 norm exceeds
+``norm_mult ×`` the running median of previously *accepted* round
+medians).  Rejected rows are masked out of aggregation via the §8
+masked-aggregation machinery (``participants`` masks renormalize the
+eqn-3 / FedAvg weights), their EF residual rolls back to its
+pre-dispatch value (the telescope property extends to the accepted
+subsequence), and their bytes are still priced — the upload happened.
+
+The gate state is a tiny ring buffer of the last ``window`` accepted
+round medians; it rides in the scan carry / async host state and is
+checkpointed with everything else, so kill-then-resume mid-fault-storm
+reproduces the admission decisions exactly.  On the very first round
+(empty history) the reference is the current round's median itself, so
+a cold start still rejects outliers relative to its own cohort.
+
+All functions are shape-generic over the leading axis: the sync engines
+pass (m,) rows with a candidate mask, the async engine passes the (K,)
+buffered rows of one flush — the masked median makes the two views
+compute the same reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+ADMISSION_MODES = ("none", "norm")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionControl:
+    """Admission-gate config (``FedConfig.admission*`` knobs)."""
+    mode: str = "none"
+    norm_mult: float = 10.0
+    window: int = 8
+
+    def __post_init__(self):
+        if self.mode not in ADMISSION_MODES:
+            raise ValueError(f"admission={self.mode!r}; "
+                             f"expected one of {ADMISSION_MODES}")
+        if self.norm_mult <= 0:
+            raise ValueError(
+                f"admission_norm_mult must be > 0; got {self.norm_mult}")
+        if self.window < 1:
+            raise ValueError(
+                f"admission_window must be >= 1; got {self.window}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+def control_of(fed: Any) -> AdmissionControl:
+    """Build the :class:`AdmissionControl` from a ``FedConfig``-like object
+    (validates the ``admission*`` knobs as a side effect)."""
+    return AdmissionControl(mode=fed.admission,
+                            norm_mult=fed.admission_norm_mult,
+                            window=fed.admission_window)
+
+
+def init_state(window: int) -> dict:
+    """Fresh gate state: an empty (window,) ring of accepted round
+    medians plus the number of rounds that contributed one."""
+    return {"meds": jnp.zeros((window,), jnp.float32),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def payload_stats(served: Any) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (L2 norm, all-finite) over a stacked payload tree whose
+    leaves carry a leading row axis.  Jittable; identical reduction
+    structure in the loop / vmap / scan / async paths."""
+    leaves = jax.tree.leaves(served)
+    n = leaves[0].shape[0]
+    sumsq = jnp.zeros((n,), jnp.float32)
+    finite = jnp.ones((n,), bool)
+    for l in leaves:
+        f = l.astype(jnp.float32).reshape(n, -1)
+        sumsq = sumsq + jnp.sum(f * f, axis=1)
+        finite = finite & jnp.all(jnp.isfinite(f), axis=1)
+    return jnp.sqrt(sumsq), finite
+
+
+def _masked_median(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Median of ``x[mask]`` without dynamic shapes: sort with +inf
+    padding, average the two middle order statistics of the masked count.
+    Returns 0 when the mask is empty."""
+    s = jnp.sort(jnp.where(mask, x, jnp.inf))
+    n = jnp.sum(mask)
+    lo = s[jnp.maximum((n - 1) // 2, 0)]
+    hi = s[jnp.maximum(n // 2, 0)]
+    return jnp.where(n > 0, 0.5 * (lo + hi), jnp.float32(0.0))
+
+
+def admit(norms: jnp.ndarray, finite: jnp.ndarray,
+          candidates: jnp.ndarray, state: dict, ctl: AdmissionControl
+          ) -> tuple[jnp.ndarray, dict]:
+    """One admission decision: ``accept ⊆ candidates`` plus the advanced
+    gate state.  Non-finite rows never pass; finite rows pass iff their
+    norm is within ``norm_mult ×`` the running-median reference.  The
+    ring only advances on rounds that accepted something, so a fully
+    corrupted round cannot poison the reference."""
+    ok = finite & candidates
+    w = state["meds"].shape[0]
+    hist_mask = jnp.arange(w) < jnp.minimum(state["count"], w)
+    hist_med = _masked_median(state["meds"], hist_mask)
+    round_med = _masked_median(norms, ok)
+    ref = jnp.where(state["count"] > 0, hist_med, round_med)
+    accept = ok & (norms <= ctl.norm_mult * ref + 1e-12)
+    acc_med = _masked_median(norms, accept)
+    any_acc = jnp.any(accept)
+    meds = jnp.where(any_acc,
+                     state["meds"].at[state["count"] % w].set(acc_med),
+                     state["meds"])
+    count = state["count"] + any_acc.astype(jnp.int32)
+    return accept, {"meds": meds, "count": count}

@@ -64,8 +64,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core import (aggregation, client_batch, client_store, comm,
-                        compress, sampling, tri_lora)
+from repro.core import (admission, aggregation, client_batch, client_store,
+                        comm, compress, faults, sampling, tri_lora)
 from repro.core.fed_engine import _fingerprint
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka
@@ -82,7 +82,9 @@ def async_fingerprint(fed, buffer_size: int, concurrency: int) -> dict:
                 async_concurrency=concurrency,
                 staleness_decay=fed.staleness_decay, latency=fed.latency,
                 latency_scale=fed.latency_scale,
-                latency_sigma=fed.latency_sigma)
+                latency_sigma=fed.latency_sigma,
+                dispatch_timeout=fed.dispatch_timeout,
+                retry_backoff=fed.retry_backoff, retry_cap=fed.retry_cap)
 
 
 @dataclasses.dataclass
@@ -95,6 +97,11 @@ class Arrival:
     arrival: float    # virtual arrival time
     loss: float = 0.0
     upload: Any = None  # served (dequantized) uplink rows, filled at fit
+    attempt: int = 0    # re-dispatch count for this (wave, client)
+    failed: str = ""    # "" clean | "crash" (died mid-fit) | "retry" (lost
+                        # in transit or timed out — re-send the same upload)
+    tx: int = 0         # uplink transmissions charged to this record so far
+    ef_prev: Any = None  # pre-fit EF residual rows (rollback on reject/drop)
 
 
 class AsyncScheduler:
@@ -111,7 +118,10 @@ class AsyncScheduler:
     def __init__(self, *, waves: Sequence[np.ndarray], m: int,
                  latency: sampling.LatencyModel, seed: int,
                  buffer_size: int, concurrency: int, rounds: int,
-                 fit_group: Callable, flush_cb: Callable):
+                 fit_group: Callable, flush_cb: Callable,
+                 timeout: float = 0.0, backoff: float = 1.0,
+                 retry_cap: int = 3, fail_of: Optional[Callable] = None,
+                 on_drop: Optional[Callable] = None):
         self.waves = waves
         self.m = m
         self.latency = latency
@@ -121,6 +131,19 @@ class AsyncScheduler:
         self.rounds = rounds
         self.fit_group = fit_group
         self.flush_cb = flush_cb
+        # §16 fault tolerance (defaults = the legacy scheduler exactly):
+        # fail_of(wave, client, attempt) -> (crash, loss) rolls the seeded
+        # fault draw at dispatch; timeout > 0 abandons any upload slower
+        # than it; abandoned/lost sends re-dispatch after backoff·2^attempt
+        # until retry_cap, then drop permanently (on_drop(rec) notifies).
+        self.timeout = float(timeout)
+        self.backoff = float(backoff)
+        self.retry_cap = int(retry_cap)
+        self.fail_of = fail_of
+        self.on_drop = on_drop
+        self._attempts: dict = {}       # (wave, client) -> crash re-dispatches
+        self.orphan_tx = 0              # priced sends of dropped records
+        self.n_dropped = 0
 
         self.heap: list = []            # (arrival, seq)
         self.by_seq: dict = {}          # seq -> Arrival (un-flushed records)
@@ -185,18 +208,95 @@ class AsyncScheduler:
         if group:
             self._dispatch(group)
 
+    def _outcome(self, w: int, c: int, attempt: int, base: float) -> Arrival:
+        """Build one Arrival departing at virtual time ``base``: roll the
+        seeded fault draw and the latency (retries re-key per attempt),
+        then classify — clean, crash (nothing sent; the server notices at
+        the timeout, or after the would-be latency when none is set), or
+        retry (the bytes left the device but never land)."""
+        crash = loss = False
+        if self.fail_of is not None:
+            crash, loss = self.fail_of(w, c, attempt)
+        lat = (self._latency_of(w, c) if attempt == 0
+               else self.latency.draw_retry(w, c, attempt, self.seed))
+        rec = Arrival(seq=self.next_seq, client=c, wave=w,
+                      version=self.version, arrival=base + lat,
+                      attempt=attempt)
+        self.next_seq += 1
+        wait = self.timeout if self.timeout > 0 else lat
+        if crash:
+            rec.failed = "crash"
+            rec.arrival = base + wait
+        elif loss or (self.timeout > 0 and lat > self.timeout):
+            rec.failed = "retry"
+            rec.tx = 1
+            rec.arrival = base + wait
+        else:
+            rec.tx = 1
+        return rec
+
     def _dispatch(self, items: list) -> None:
         recs = []
         for w, c in items:
-            rec = Arrival(seq=self.next_seq, client=c, wave=w,
-                          version=self.version,
-                          arrival=self.sim_now + self._latency_of(w, c))
-            self.next_seq += 1
+            rec = self._outcome(w, c, self._attempts.get((w, c), 0),
+                                self.sim_now)
             self.in_flight += 1
             self.by_seq[rec.seq] = rec
             heapq.heappush(self.heap, (rec.arrival, rec.seq))
             recs.append(rec)
-        self.fit_group(recs)
+        # crashed clients died mid-fit: they neither train nor consume
+        # their data-stream session — the re-dispatch refits it
+        live = [r for r in recs if r.failed != "crash"]
+        if live:
+            self.fit_group(live)
+
+    def _drop(self, rec: Arrival) -> None:
+        self.busy.discard(rec.client)
+        self.orphan_tx += rec.tx
+        self.n_dropped += 1
+        if self.on_drop is not None:
+            self.on_drop(rec)
+
+    def _requeue_crash(self, rec: Arrival) -> None:
+        """Free the crashed client and re-queue the SAME wave at the head
+        of its deferral stream (its later waves, if already deferred, must
+        stay behind it — per-client wave order is the data-stream
+        contract).  Past retry_cap the wave is abandoned instead."""
+        self.in_flight -= 1
+        del self.by_seq[rec.seq]
+        if rec.attempt + 1 > self.retry_cap:
+            self._drop(rec)
+            return
+        self.busy.discard(rec.client)
+        self._attempts[(rec.wave, rec.client)] = rec.attempt + 1
+        pos = next((i for i, (_, c) in enumerate(self.deferred)
+                    if c == rec.client), len(self.deferred))
+        self.deferred.insert(pos, (rec.wave, rec.client))
+        self._deferred_clients[rec.client] = \
+            self._deferred_clients.get(rec.client, 0) + 1
+
+    def _retry(self, rec: Arrival) -> None:
+        """Re-send an upload the server never received: exponential
+        backoff on the virtual clock, a fresh latency/fault roll keyed by
+        the new attempt, and the ALREADY-FITTED upload carried over (the
+        client does not retrain).  Past retry_cap the record drops."""
+        self.in_flight -= 1
+        del self.by_seq[rec.seq]
+        if rec.attempt + 1 > self.retry_cap:
+            self._drop(rec)
+            return
+        base = self.sim_now + self.backoff * (2.0 ** rec.attempt)
+        nxt = self._outcome(rec.wave, rec.client, rec.attempt + 1, base)
+        if nxt.failed == "crash":
+            # the fit already happened; a crash during a re-send is just
+            # another failed transmission (and prices no bytes)
+            nxt.failed = "retry"
+        nxt.loss, nxt.upload, nxt.ef_prev = rec.loss, rec.upload, rec.ef_prev
+        nxt.version = rec.version       # staleness counts from the ORIGINAL
+        nxt.tx += rec.tx                # dispatch, where the fit happened
+        self.in_flight += 1
+        self.by_seq[nxt.seq] = nxt
+        heapq.heappush(self.heap, (nxt.arrival, nxt.seq))
 
     # ---------------------------------------------------------------- flush
     def _do_flush(self) -> None:
@@ -238,6 +338,12 @@ class AsyncScheduler:
                 _, seq = heapq.heappop(self.heap)
                 group.append(self.by_seq[seq])
             for rec in group:
+                if rec.failed == "crash":
+                    self._requeue_crash(rec)
+                    continue
+                if rec.failed == "retry":
+                    self._retry(rec)
+                    continue
                 self.in_flight -= 1
                 self.buffer.append(rec)
                 if len(self.buffer) == self.buffer_size:
@@ -255,8 +361,14 @@ class AsyncScheduler:
 # checkpoint plumbing
 # ---------------------------------------------------------------------------
 
+_FCODE = {"": 0, "crash": 1, "retry": 2}
+_FNAME = {v: k for k, v in _FCODE.items()}
+
+
 def _save_async(fed, sched: AsyncScheduler, stacked, s_model, hist, consumed,
-                fingerprint: dict, has_payload: bool, strategy) -> None:
+                fingerprint: dict, has_payload: bool, strategy,
+                adm_state=None, track: bool = False,
+                track_ef: bool = False) -> None:
     assert not sched.buffer, "checkpoints are written at flush boundaries"
     tree = {"state": stacked,
             "loss": np.asarray(hist["loss"], np.float64),
@@ -268,6 +380,19 @@ def _save_async(fed, sched: AsyncScheduler, stacked, s_model, hist, consumed,
             "consumed": np.asarray(consumed, np.int64)}
     if s_model is not None:
         tree["s_model"] = s_model
+    if adm_state is not None:
+        tree["admission"] = jax.tree.map(np.asarray, adm_state)
+    rejv = failv = []
+    if track:
+        rejv = [i for row in hist["rej"] for i in row]
+        failv = [i for row in hist["fail"] for i in row]
+        tree["robust"] = {
+            "tx": np.asarray(hist["tx"], np.int64),
+            "nacc": np.asarray(hist["nacc"], np.int64),
+            "rejc": np.asarray([len(r) for r in hist["rej"]], np.int32),
+            "rejv": np.asarray(rejv, np.int32),
+            "failc": np.asarray([len(r) for r in hist["fail"]], np.int32),
+            "failv": np.asarray(failv, np.int32)}
     pending = sorted(sched.by_seq.values(), key=lambda r: r.seq)
     if pending:
         tree["pending"] = {
@@ -277,9 +402,40 @@ def _save_async(fed, sched: AsyncScheduler, stacked, s_model, hist, consumed,
             "version": np.asarray([r.version for r in pending], np.int64),
             "arrival": np.asarray([r.arrival for r in pending], np.float64),
             "loss": np.asarray([r.loss for r in pending], np.float32)}
+        if track:
+            tree["pending"]["attempt"] = np.asarray(
+                [r.attempt for r in pending], np.int32)
+            tree["pending"]["fcode"] = np.asarray(
+                [_FCODE[r.failed] for r in pending], np.int32)
+            tree["pending"]["tx"] = np.asarray(
+                [r.tx for r in pending], np.int64)
         if has_payload:
-            tree["pending_served"] = jax.tree.map(
-                lambda *xs: jnp.stack(xs), *[r.upload for r in pending])
+            # crashed records never fitted — their upload slot is None;
+            # store zero rows there (never consumed: a crash re-queues
+            # through the deferral path, it does not flush)
+            tmpl = next((r.upload for r in pending if r.upload is not None),
+                        None)
+            if tmpl is not None:
+                zed = jax.tree.map(jnp.zeros_like, tmpl)
+                tree["pending_served"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[r.upload if r.upload is not None else zed
+                      for r in pending])
+        if track_ef:
+            tmpl = next((r.ef_prev for r in pending
+                         if r.ef_prev is not None), None)
+            if tmpl is not None:
+                zed = jax.tree.map(jnp.zeros_like, tmpl)
+                tree["pending_ef"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[r.ef_prev if r.ef_prev is not None else zed
+                      for r in pending])
+    if sched._attempts:
+        keys = sorted(sched._attempts)
+        tree["attempts"] = {
+            "wave": np.asarray([w for w, _ in keys], np.int32),
+            "client": np.asarray([c for _, c in keys], np.int32),
+            "n": np.asarray([sched._attempts[k] for k in keys], np.int32)}
     if sched.deferred:
         tree["deferred"] = {
             "wave": np.asarray([w for w, _ in sched.deferred], np.int32),
@@ -288,20 +444,31 @@ def _save_async(fed, sched: AsyncScheduler, stacked, s_model, hist, consumed,
         fingerprint, engine="async", strategy=strategy.name,
         rounds_done=sched.version, sim_now=sched.sim_now,
         next_seq=sched.next_seq, wc=sched.wc, wi=sched.wi,
-        n_pending=len(pending), n_deferred=len(sched.deferred)))
+        n_pending=len(pending), n_deferred=len(sched.deferred),
+        track=track, has_admission=adm_state is not None,
+        has_pending_served="pending_served" in tree,
+        has_pending_ef="pending_ef" in tree,
+        n_attempts=len(sched._attempts), n_rejv=len(rejv),
+        n_failv=len(failv), orphan_tx=sched.orphan_tx,
+        n_dropped=sched.n_dropped))
 
 
 def _load_async(fed, stacked, s_model, m: int, fingerprint: dict,
                 payload_struct, has_payload: bool):
     """Restore a flush-boundary checkpoint: (stacked, s_model, history
     arrays, consumed, pending table, served rows, deferred table, meta)."""
+    from repro.core.fed_engine import ROBUSTNESS_DEFAULTS
     meta = ckpt.metadata(fed.checkpoint_path)
     if meta.get("engine") != "async" or "rounds_done" not in meta:
         raise ValueError(f"{fed.checkpoint_path!r} is not an async-engine "
                          f"checkpoint")
-    ckpt.check_fingerprint(fed.checkpoint_path, meta, fingerprint,
-                           defaults={"attn_impl": "auto"},  # pre-§14 ckpts
-                           ignore=("rounds",))
+    ckpt.check_fingerprint(
+        fed.checkpoint_path, meta, fingerprint,
+        defaults=dict({"attn_impl": "auto",        # pre-§14 checkpoints
+                       "dispatch_timeout": 0.0,    # pre-§16 checkpoints
+                       "retry_backoff": 1.0, "retry_cap": 3},
+                      **ROBUSTNESS_DEFAULTS),
+        ignore=("rounds",))
     done = int(meta["rounds_done"])
     if done > fed.rounds:
         raise ValueError(f"checkpoint has {done} completed flushes but the "
@@ -317,12 +484,24 @@ def _load_async(fed, stacked, s_model, m: int, fingerprint: dict,
             "consumed": np.zeros((m,), np.int64)}
     if s_model is not None:
         like["s_model"] = s_model
+    if meta.get("track", False):
+        like["robust"] = {
+            "tx": np.zeros((done,), np.int64),
+            "nacc": np.zeros((done,), np.int64),
+            "rejc": np.zeros((done,), np.int32),
+            "rejv": np.zeros((int(meta.get("n_rejv", 0)),), np.int32),
+            "failc": np.zeros((done,), np.int32),
+            "failv": np.zeros((int(meta.get("n_failv", 0)),), np.int32)}
     n_pend = int(meta.get("n_pending", 0))
     served = None
-    if n_pend and has_payload:
+    if n_pend and has_payload and meta.get("has_pending_served", True):
         like["pending_served"] = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((n_pend,) + tuple(s.shape[1:]),
                                            s.dtype), payload_struct)
+    if n_pend and meta.get("has_pending_ef", False):
+        like["pending_ef"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pend,) + tuple(s.shape[1:]),
+                                           jnp.float32), payload_struct)
     # host-side restore: the float64 clock/loss tables must NOT round-trip
     # through jax (x64 disabled would truncate them); the caller re-places
     # the state on device itself
@@ -332,6 +511,11 @@ def _load_async(fed, stacked, s_model, m: int, fingerprint: dict,
         if n_pend else {}
     deferred = ckpt.load_subtree(fed.checkpoint_path, "deferred") \
         if int(meta.get("n_deferred", 0)) else {}
+    if meta.get("has_admission", False):
+        tree["admission"] = ckpt.load_subtree(fed.checkpoint_path,
+                                              "admission")
+    if int(meta.get("n_attempts", 0)):
+        tree["attempts"] = ckpt.load_subtree(fed.checkpoint_path, "attempts")
     return (tree["state"], tree.get("s_model"), tree, pending, served,
             deferred, meta)
 
@@ -372,6 +556,18 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
     fingerprint = async_fingerprint(fed, K, Mc)
     chunk = max(1, int(fed.chunk_rounds))
     eval_every = max(1, int(fed.eval_every))
+
+    # §16 fault tolerance: seeded faults + admission + retry machinery.
+    # ``track`` widens the history/checkpoint schema — it is on whenever
+    # retries or rejections are possible, so the fault-free config keeps
+    # the legacy byte accounting and checkpoint layout bit-for-bit.
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
+    timeout = float(fed.dispatch_timeout)
+    backoff = float(fed.retry_backoff)
+    retry_cap = int(fed.retry_cap)
+    track = robust or timeout > 0
 
     pstore = client_store.make_store("device", states, parallelism=mode)
     put = pstore.place
@@ -414,16 +610,26 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
     # local fit + after_local, encode the uplink (per-record wave keys, EF
     # advance), scatter back.  One compiled program per distinct group
     # size (jit retraces by shape).
-    def _fit(st, ids, waves, toks, labs):
+    def _fit(st, ids, waves, toks, labs, divm=None):
         rows = client_batch.gather_clients(st, ids)
+        ef_prev = rows["ef"] if compressed else None
         tr = strategy.trainable(rows)
         w_ref = rows.get("w", {})
         tr, losses = vfit(tr, w_ref, toks, labs)
         new = dict(rows)
         new.update(tr)
         new = strategy.after_local(new, eta)
+        if divm is not None:
+            # divergent fit: the resident state reverts to the round start
+            # (local divergence detection restarts from the last good
+            # state) while the upload blows up by divergent_scale
+            new = client_batch.select_clients(
+                jnp.logical_not(divm), new, rows)
         if compressed:
             payload = strategy.uplink(new)
+            if divm is not None:
+                payload = faults.scale_rows(payload, divm,
+                                            fm.divergent_scale)
             # the sync engines' exact per-(round, client) key stream: the
             # record's wave IS its sync round index
             keys = jax.vmap(lambda w, i: compress.client_key(seed, w, i))(
@@ -433,44 +639,72 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
             new = dict(new, ef=ef_new)
         else:
             served = strategy.uplink(new)        # None for aggregate="none"
-        return client_batch.scatter_clients(st, ids, new), losses, served
+            if served is not None and divm is not None:
+                served = faults.scale_rows(served, divm, fm.divergent_scale)
+        return (client_batch.scatter_clients(st, ids, new), losses, served,
+                ef_prev)
 
     fit_jit = _FIT_CACHE.get_or_build(
         (task.base, task.cfg),
         ("async-fit", strategy.name, fed.lr, fed.local_steps,
          fed.batch_size, eta, mode, fed.uplink_codec,
-         seed if compressed else None),
+         seed if compressed else None,
+         (fm.divergent, fm.divergent_scale) if fm.active else None),
         lambda: jax.jit(_fit))
 
     # ---- jitted flush: scatter the buffered served uploads over the
     # current population payload, refresh S^model rows for the
     # contributors, staleness-discount, aggregate, masked install.
-    def _flush(st, s_model_c, served_K, ids, stale, c):
+    def _flush(st, s_model_c, served_K, ids, stale, c,
+               accept_k=None, ef_K=None):
         pmask = jnp.zeros((m,), bool).at[ids].set(True)
+        amask = (jnp.zeros((m,), bool).at[ids].set(accept_k)
+                 if accept_k is not None else pmask)
         col = None
         if decay != 1.0:
             # decay == 1.0 compiles the exact sync program (col_scale=None)
             col = jnp.ones((m,), jnp.float32).at[ids].set(
                 jnp.power(decay, stale.astype(jnp.float32)))
+        if accept_k is not None and ef_K is not None:
+            # EF rollback: a rejected upload never advances the residual —
+            # the telescope property holds over the ACCEPTED subsequence
+            cur = client_batch.gather_clients(st["ef"], ids)
+            st = dict(st, ef=client_batch.scatter_clients(
+                st["ef"], ids, client_batch.select_clients(
+                    accept_k, cur, ef_K)))
         served_m = client_batch.scatter_clients(strategy.uplink(st), ids,
                                                 served_K)
         weights = None
         if use_model:
             cs_src = (served_m if compressed
                       else tri_lora.tree_payload(st["adapter"]))
-            s_model_c = cka.refresh_rows_inline(
+            refreshed = cka.refresh_rows_inline(
                 s_model_c, cka.stacked_cs(cs_src), ids, c["probes"])
+            if accept_k is not None:
+                # only ACCEPTED rows refresh; pairs touching a buffered-
+                # but-rejected client keep their previous entry
+                clean = jnp.logical_not(pmask) | amask
+                valid = ((amask[:, None] & clean[None, :])
+                         | (amask[None, :] & clean[:, None]))
+                s_model_c = jnp.where(valid, refreshed, s_model_c)
+            else:
+                s_model_c = refreshed
         if personalized:
             sims = ([c["s_data"]] if use_data else []) \
                 + ([s_model_c] if use_model else [])
             weights = aggregation.personalized_weights(
-                sum(sims), fed.self_weight, pmask, col_scale=col)
+                sum(sims), fed.self_weight, amask, col_scale=col)
+        if accept_k is not None:
+            # rejected rows may hold NaN/Inf; their weight is 0 but
+            # 0 x NaN still poisons the aggregation einsum
+            served_m = faults.zero_rows(served_m,
+                                        amask | jnp.logical_not(pmask))
         down = strategy.server_stacked(served_m, sample_counts=c["counts"],
-                                       weights=weights, participants=pmask,
+                                       weights=weights, participants=amask,
                                        col_scale=col)
         if down is not None:
             st = client_batch.select_clients(
-                pmask, strategy.install(st, down), st)
+                amask, strategy.install(st, down), st)
         return st, s_model_c
 
     flush_jit = None
@@ -478,7 +712,9 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
         flush_jit = _FLUSH_CACHE.get_or_build(
             (task.base, task.cfg),
             ("async-flush", strategy.name, fed.self_weight, use_data,
-             use_model, mode, fed.uplink_codec, decay),
+             use_model, mode, fed.uplink_codec, decay,
+             (fm.corrupt_mode if fm.active else None, adm.mode,
+              adm.norm_mult, adm.window) if robust else None),
             lambda: jax.jit(_flush))
 
     veval = _EVAL_CACHE.get_or_build(
@@ -489,10 +725,31 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
     waves = [np.asarray(p.sampled) for p in plans]
     consumed = np.zeros(m, np.int64)     # per-client completed draw sessions
     hist = {"loss": [], "accs": [], "wall": [], "sim": [], "stale": [],
-            "ids": []}
+            "ids": [], "tx": [], "nacc": [], "rej": [], "fail": []}
     accs_carry = [np.zeros(m, np.float32)]
     t_last = [time.perf_counter()]
     sched_ref: dict = {}
+    adm_ref = {"state": admission.init_state(adm.window)
+               if adm.enabled else None}
+    drop_pending: list = []     # permanently-dropped clients since last flush
+
+    fail_of = None
+    if fm.active:
+        def fail_of(w, c, a):
+            crash, loss, _, _ = fm.draw_one(w, c, seed, a)
+            return crash, loss
+
+    def on_drop(rec):
+        # a permanently-abandoned record: attribute it to the next flush's
+        # history row, and roll its EF residual back (the transmitted
+        # payload never lands, so the residual advance must not stick)
+        drop_pending.append(int(rec.client))
+        if compressed and rec.ef_prev is not None:
+            st = state_ref["stacked"]
+            ids1 = jnp.asarray([rec.client], jnp.int32)
+            ef1 = jax.tree.map(lambda l: l[None], rec.ef_prev)
+            state_ref["stacked"] = dict(st, ef=client_batch.scatter_clients(
+                st["ef"], ids1, ef1))
 
     def fit_group(records):
         ids = [r.client for r in records]
@@ -510,27 +767,63 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
             consumed[r.client] += 1
             toks.append(np.stack([b["tokens"] for b in bt]))
             labs.append(np.stack([b["labels"] for b in bt]))
-        new_st, losses, served = fit_jit(
-            state_ref["stacked"], jnp.asarray(ids, jnp.int32),
-            jnp.asarray(wv, jnp.int32),
-            put(jnp.asarray(np.stack(toks))),
-            put(jnp.asarray(np.stack(labs))))
+        args = (state_ref["stacked"], jnp.asarray(ids, jnp.int32),
+                jnp.asarray(wv, jnp.int32),
+                put(jnp.asarray(np.stack(toks))),
+                put(jnp.asarray(np.stack(labs))))
+        if fm.active:
+            divm = np.asarray([fm.draw_one(r.wave, r.client, seed,
+                                           r.attempt)[3] for r in records])
+            new_st, losses, served, ef_prev = fit_jit(
+                *args, jnp.asarray(divm))
+        else:
+            new_st, losses, served, ef_prev = fit_jit(*args)
         state_ref["stacked"] = new_st
         losses = np.asarray(losses)
         for j, r in enumerate(records):
             r.loss = float(losses[j])
             if served is not None:
                 r.upload = jax.tree.map(lambda l, j=j: l[j], served)
+            if ef_prev is not None:
+                r.ef_prev = jax.tree.map(lambda l, j=j: l[j], ef_prev)
 
     def on_flush(records, f, sim_now):
         ids = np.asarray([r.client for r in records], np.int32)
         stale = np.asarray([f - r.version for r in records], np.float64)
-        if has_payload:
+        accept_np = np.ones(len(records), bool)
+        if has_payload and not track:
             served_K = jax.tree.map(lambda *xs: jnp.stack(xs),
                                     *[r.upload for r in records])
             st, sm = flush_jit(state_ref["stacked"], sm_ref["s_model"],
                                served_K, jnp.asarray(ids),
                                jnp.asarray(stale), consts)
+            state_ref["stacked"] = st
+            sm_ref["s_model"] = sm
+        elif has_payload:
+            ups = [r.upload for r in records]
+            if fm.active and fm.corrupt > 0:
+                # per-record in-transit corruption (the sync engines flip
+                # the wire tree; the uploads here are already decoded, so
+                # bitflip mangles the decoded rows — documented asymmetry)
+                for j, r in enumerate(records):
+                    if fm.draw_one(r.wave, r.client, seed, r.attempt)[2]:
+                        ups[j] = faults.corrupt_one(None, None, ups[j],
+                                                    fm.corrupt_mode)
+            served_K = jax.tree.map(lambda *xs: jnp.stack(xs), *ups)
+            if adm.enabled:
+                norms, finite = admission.payload_stats(served_K)
+                acc, adm_ref["state"] = admission.admit(
+                    norms, finite, jnp.ones(len(records), bool),
+                    adm_ref["state"], adm)
+                accept_np = np.asarray(acc)
+            ef_K = None
+            if compressed:
+                ef_K = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[r.ef_prev for r in records])
+            st, sm = flush_jit(state_ref["stacked"], sm_ref["s_model"],
+                               served_K, jnp.asarray(ids),
+                               jnp.asarray(stale), consts,
+                               jnp.asarray(accept_np), ef_K)
             state_ref["stacked"] = st
             sm_ref["s_model"] = sm
         evaluated = f % eval_every == 0 or f == fed.rounds - 1
@@ -546,11 +839,21 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
         hist["sim"].append(float(sim_now))
         hist["stale"].append(float(np.mean(stale)))
         hist["ids"].append(sorted(int(i) for i in ids))
+        if track:
+            sched = sched_ref["sched"]
+            tx_total = sum(r.tx for r in records) + sched.orphan_tx
+            sched.orphan_tx = 0
+            hist["tx"].append(int(tx_total))
+            hist["nacc"].append(int(accept_np.sum()))
+            hist["rej"].append(sorted(int(i) for i in ids[~accept_np]))
+            hist["fail"].append(sorted(drop_pending))
+            drop_pending.clear()
         if fed.checkpoint_path and ((f + 1) % chunk == 0
                                     or f + 1 == fed.rounds):
             _save_async(fed, sched_ref["sched"], state_ref["stacked"],
                         sm_ref["s_model"], hist, consumed, fingerprint,
-                        has_payload, strategy)
+                        has_payload, strategy, adm_state=adm_ref["state"],
+                        track=track, track_ef=compressed and track)
         if verbose:
             print(f"[{strategy.name}] flush {f:3d} t={sim_now:8.2f} "
                   f"loss {hist['loss'][-1]:.4f} "
@@ -560,7 +863,10 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
 
     sched = AsyncScheduler(waves=waves, m=m, latency=latency, seed=fed.seed,
                            buffer_size=K, concurrency=Mc, rounds=fed.rounds,
-                           fit_group=fit_group, flush_cb=on_flush)
+                           fit_group=fit_group, flush_cb=on_flush,
+                           timeout=timeout, backoff=backoff,
+                           retry_cap=retry_cap, fail_of=fail_of,
+                           on_drop=on_drop)
     sched_ref["sched"] = sched
 
     # ---- resume from a flush-boundary checkpoint
@@ -583,6 +889,22 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
         hist["sim"] = [float(v) for v in tree["sim"]]
         hist["stale"] = [float(v) for v in tree["stale"]]
         hist["ids"] = [[int(i) for i in row] for row in tree["pids"]]
+        if track and "robust" in tree:
+            rb = tree["robust"]
+            hist["tx"] = [int(v) for v in rb["tx"]]
+            hist["nacc"] = [int(v) for v in rb["nacc"]]
+
+            def _unflatten(counts, vals):
+                out, at = [], 0
+                for n in (int(c) for c in counts):
+                    out.append([int(i) for i in vals[at:at + n]])
+                    at += n
+                return out
+
+            hist["rej"] = _unflatten(rb["rejc"], rb["rejv"])
+            hist["fail"] = _unflatten(rb["failc"], rb["failv"])
+        if adm.enabled and "admission" in tree:
+            adm_ref["state"] = jax.tree.map(jnp.asarray, tree["admission"])
         consumed[:] = np.asarray(tree["consumed"])
         accs_carry[0] = np.asarray(hist["accs"][-1], np.float32)
         # fast-forward every client's data stream to its stored position
@@ -594,12 +916,21 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
         sched.next_seq = int(meta["next_seq"])
         sched.wc = int(meta["wc"])
         sched.wi = int(meta["wi"])
+        sched.orphan_tx = int(meta.get("orphan_tx", 0))
+        sched.n_dropped = int(meta.get("n_dropped", 0))
+        if "attempts" in tree:
+            at = tree["attempts"]
+            for w, c, n in zip(np.atleast_1d(at["wave"]),
+                               np.atleast_1d(at["client"]),
+                               np.atleast_1d(at["n"])):
+                sched._attempts[(int(w), int(c))] = int(n)
         for w, c in zip(np.atleast_1d(deferred.get("wave", [])),
                         np.atleast_1d(deferred.get("client", []))):
             sched.deferred.append((int(w), int(c)))
             sched._deferred_clients[int(c)] = \
                 sched._deferred_clients.get(int(c), 0) + 1
         if pending:
+            ef_p = tree.get("pending_ef")
             order = np.argsort(np.asarray(pending["seq"]))
             for j in order:
                 rec = Arrival(seq=int(pending["seq"][j]),
@@ -608,10 +939,18 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
                               version=int(pending["version"][j]),
                               arrival=float(pending["arrival"][j]),
                               loss=float(pending["loss"][j]))
-                if has_payload:
+                if "attempt" in pending:
+                    rec.attempt = int(pending["attempt"][j])
+                    rec.failed = _FNAME[int(pending["fcode"][j])]
+                    rec.tx = int(pending["tx"][j])
+                if has_payload and served_p is not None \
+                        and rec.failed != "crash":
                     rec.upload = jax.tree.map(
                         lambda l, j=j: jnp.asarray(np.asarray(l)[j]),
                         served_p)
+                if ef_p is not None and rec.failed != "crash":
+                    rec.ef_prev = jax.tree.map(
+                        lambda l, j=j: jnp.asarray(np.asarray(l)[j]), ef_p)
                 sched.by_seq[rec.seq] = rec
                 sched.busy.add(rec.client)
                 sched.in_flight += 1
@@ -623,14 +962,24 @@ def run_async(*, task, fed, strategy, states: list, loaders: Sequence,
     t_last[0] = time.perf_counter()
     sched.run()
 
+    def _n_up(f: int) -> int:
+        # with retries every transmission is priced, orphans included
+        return hist["tx"][f] if track else K
+
+    def _n_down(f: int) -> int:
+        return hist["nacc"][f] if track else K
+
     history = [
         RoundRecord(
             f, hist["loss"][f], hist["accs"][f],
-            uplink_bytes=per_b * K, downlink_bytes=per_down_b * K,
+            uplink_bytes=per_b * _n_up(f),
+            downlink_bytes=per_down_b * _n_down(f),
             wall_s=hist["wall"][f],
             participants=hist["ids"][f], sampled=hist["ids"][f], dropped=[],
-            uplink_elems=per_e * K,
-            evaluated=(f % eval_every == 0 or f == fed.rounds - 1))
+            uplink_elems=per_e * _n_up(f),
+            evaluated=(f % eval_every == 0 or f == fed.rounds - 1),
+            rejected=hist["rej"][f] if track else [],
+            failed=hist["fail"][f] if track else [])
         for f in range(fed.rounds)]
 
     return {

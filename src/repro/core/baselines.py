@@ -152,7 +152,9 @@ class Strategy:
         if self.aggregate == "fedavg":
             g = aggregation.fedavg(payloads, sample_counts, participants)
             return [g] * len(payloads)
-        assert weights is not None, "personalized aggregation needs weights"
+        if weights is None:
+            raise ValueError(f"personalized aggregation needs weights; "
+                             f"strategy {self.name!r} got weights=None")
         return aggregation.aggregate_payloads(payloads, weights)
 
     def server_stacked(self, payload: Any, *, sample_counts,
@@ -174,7 +176,9 @@ class Strategy:
             g = aggregation.fedavg_stacked(payload, sample_counts,
                                            participants, col_scale=col_scale)
             return client_batch.broadcast_to_clients(g, m)
-        assert weights is not None, "personalized aggregation needs weights"
+        if weights is None:
+            raise ValueError(f"personalized aggregation needs weights; "
+                             f"strategy {self.name!r} got weights=None")
         return aggregation.aggregate_stacked(payload, weights)
 
     def install(self, state: dict, downlink: Any) -> dict:

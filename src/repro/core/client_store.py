@@ -65,7 +65,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt
-from repro.core import aggregation, client_batch, comm, compress, sampling
+from repro.core import (admission, aggregation, client_batch, comm, compress,
+                        faults, sampling)
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka
 
@@ -281,13 +282,24 @@ def _build_cohort_fn(strategy, fed, local_fit: Callable,
     eta = fed.pfedme_eta
     self_weight = fed.self_weight
     codec = compress.get_codec(fed.uplink_codec)
-    compressed = not codec.is_identity and strategy.aggregate != "none"
+    communicates = strategy.aggregate != "none"
+    compressed = not codec.is_identity and communicates
     personalized = strategy.aggregate == "personalized"
     seed = fed.seed
     m = fed.n_clients
+    # §16 robustness — every new op below is gated on these static flags,
+    # so the fault-free config traces the legacy cohort program unchanged
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
 
-    def cohort_step(cohort, bank, ef_bank, s_model, xs, consts):
-        toks, labs, pml, pmf, cids, rnd = xs
+    def cohort_step(cohort, bank, ef_bank, s_model, adm_state, xs, consts):
+        if fm.active:
+            # fault masks arrive cohort-local: (k,) rows over SORTED sampled
+            toks, labs, pml, pmf, cids, rnd, fc_l, fl_l, fcor_l, fv_l = xs
+        else:
+            toks, labs, pml, pmf, cids, rnd = xs
+        prev_c = dict(cohort)
         tr = strategy.trainable(cohort)
         w_ref = cohort.get("w", {})
         # the whole cohort trains (stragglers too); pml masks the install
@@ -295,24 +307,43 @@ def _build_cohort_fn(strategy, fed, local_fit: Callable,
         new = dict(cohort)
         new.update(tr)
         cohort = strategy.after_local(new, eta)
+        if fm.active:
+            # crash: the round's local work is lost; divergent: the client's
+            # divergence detection resets to the round start
+            cohort = client_batch.select_clients(~(fc_l | fv_l), cohort,
+                                                 prev_c)
 
         payload = strategy.uplink(cohort)
+        if fm.active and fm.divergent > 0:
+            # the divergent upload is the blowup the norm gate must catch
+            payload = faults.scale_rows(payload, fv_l, fm.divergent_scale)
+        if fm.active:
+            sent_l = pml & ~fc_l             # left the device at all
+            delivered_l = sent_l & ~fl_l     # reached the server
+        else:
+            delivered_l = pml
         if use_model:
             # post-fit Cs join the all-m bank BEFORE encode/refresh: the
             # CKA columns (and the compressed re-encode) must see sampled
             # clients' fresh Cs and everyone else's frozen ones
             bank = client_batch.scatter_clients(bank, cids, payload)
+        enc_c = None
+        ef_all = ef_new = None
         if compressed:
             if use_model:
                 # the device engines encode ALL m every round (key stream
                 # folded per (round, client)), and unsampled clients'
                 # decoded Cs vary per round through it — so equivalence
                 # requires the full-bank encode, not a cohort-only one
-                _, dec_all, ef_all = compress.encode_stacked(
+                enc_all, dec_all, ef_all = compress.encode_stacked(
                     codec, bank, ef_bank, compress.client_keys(seed, rnd, m))
-                ef_bank = client_batch.select_clients(pmf, ef_all, ef_bank)
-                cohort = dict(cohort,
-                              ef=client_batch.gather_clients(ef_bank, cids))
+                if not robust:
+                    ef_bank = client_batch.select_clients(pmf, ef_all,
+                                                          ef_bank)
+                    cohort = dict(cohort, ef=client_batch.gather_clients(
+                        ef_bank, cids))
+                if fm.active and fm.corrupt > 0:
+                    enc_c = client_batch.gather_clients(enc_all, cids)
                 served_all = dec_all
                 served = client_batch.gather_clients(dec_all, cids)
             else:
@@ -321,14 +352,47 @@ def _build_cohort_fn(strategy, fed, local_fit: Callable,
                 # cohort-only encode equals the all-m one row for row
                 keys = jax.vmap(
                     lambda i: compress.client_key(seed, rnd, i))(cids)
-                _, served, ef_new = compress.encode_stacked(
+                enc_c, served, ef_new = compress.encode_stacked(
                     codec, payload, cohort["ef"], keys)
-                cohort = dict(cohort, ef=client_batch.select_clients(
-                    pml, ef_new, cohort["ef"]))
+                if not robust:
+                    cohort = dict(cohort, ef=client_batch.select_clients(
+                        pml, ef_new, cohort["ef"]))
                 served_all = None
         else:
             served = payload
             served_all = bank
+        if fm.active and fm.corrupt > 0 and communicates:
+            served = faults.corrupt_served(codec if compressed else None,
+                                           enc_c, served,
+                                           delivered_l & fcor_l,
+                                           fm.corrupt_mode)
+            if served_all is not None:
+                # the server's m-wide CKA view must see the mangled rows too
+                served_all = client_batch.scatter_clients(served_all, cids,
+                                                          served)
+        accept_l = delivered_l
+        if robust and communicates:
+            if adm.enabled:
+                # participants ⊆ cohort, so the k-row gate computes the
+                # same masked medians as the device engines' m-row one
+                norms, finite = admission.payload_stats(served)
+                accept_l, adm_state = admission.admit(
+                    norms, finite, delivered_l, adm_state, adm)
+            if compressed:
+                # EF advances only for ACCEPTED uploads — rejection rolls
+                # the residual back by never installing the new one
+                if use_model:
+                    accept_f = jnp.zeros(m, bool).at[cids].set(accept_l)
+                    ef_bank = client_batch.select_clients(accept_f, ef_all,
+                                                          ef_bank)
+                    cohort = dict(cohort, ef=client_batch.gather_clients(
+                        ef_bank, cids))
+                else:
+                    cohort = dict(cohort, ef=client_batch.select_clients(
+                        accept_l, ef_new, cohort["ef"]))
+        agg_l = accept_l if robust and communicates else pml
+        agg_f = (jnp.zeros(m, bool).at[cids].set(accept_l)
+                 if robust and communicates else pmf)
         weights = None
         if personalized:
             sims = []
@@ -336,27 +400,45 @@ def _build_cohort_fn(strategy, fed, local_fit: Callable,
                 sims.append(consts["s_data"])
             if use_model:
                 cs = cka.stacked_cs(served_all)
-                s_model = cka.refresh_rows_inline(s_model, cs, cids,
-                                                  consts["probes"])
+                refreshed = cka.refresh_rows_inline(s_model, cs, cids,
+                                                    consts["probes"])
+                if robust:
+                    # refresh only ACCEPTED rows; pairs touching a sampled-
+                    # but-unaccepted client keep their previous entry
+                    smask_f = jnp.zeros(m, bool).at[cids].set(True)
+                    clean = jnp.logical_not(smask_f) | agg_f
+                    valid = ((agg_f[:, None] & clean[None, :])
+                             | (agg_f[None, :] & clean[:, None]))
+                    s_model = jnp.where(valid, refreshed, s_model)
+                else:
+                    s_model = refreshed
                 sims.append(s_model)
-            assert sims, "celora needs at least one similarity term"
+            if not sims:
+                raise ValueError(
+                    f"celora needs at least one similarity term; got "
+                    f"use_data_sim={use_data}, use_model_sim={use_model}")
             w_full = aggregation.personalized_weights(sum(sims), self_weight,
-                                                      pmf)
+                                                      agg_f)
             # nonzero columns all live in the cohort (see docstring), so
             # the k×k restriction reproduces the all-m mix exactly
             weights = w_full[cids[:, None], cids[None, :]]
+        if robust and communicates:
+            # rejected/undelivered rows may hold NaN/Inf; their weight is 0
+            # but 0 x NaN still poisons the aggregation einsum
+            served = faults.zero_rows(served, accept_l)
         down = strategy.server_stacked(
             served, sample_counts=consts["counts"][cids],
-            weights=weights, participants=pml)
+            weights=weights, participants=agg_l)
         if down is not None:
             cohort = client_batch.select_clients(
-                pml, strategy.install(cohort, down), cohort)
+                agg_l, strategy.install(cohort, down), cohort)
         if use_model:
             # re-scatter AFTER install: participants' resident Cs changed;
             # the bank row contract is "each client's CURRENT C"
             bank = client_batch.scatter_clients(bank, cids,
                                                 strategy.uplink(cohort))
-        return cohort, bank, ef_bank, s_model, jnp.mean(losses)
+        return (cohort, bank, ef_bank, s_model, adm_state,
+                jnp.mean(losses), accept_l)
 
     return jax.jit(cohort_step)
 
@@ -390,10 +472,19 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
     del states
 
     codec = compress.get_codec(fed.uplink_codec)
-    compressed = not codec.is_identity and strategy.aggregate != "none"
+    communicates = strategy.aggregate != "none"
+    compressed = not codec.is_identity and communicates
     personalized = strategy.aggregate == "personalized"
     use_data = personalized and fed.use_data_sim and s_data is not None
     use_model = personalized and fed.use_model_sim
+
+    # ---- §16 robustness: seeded fault draws + admission state (host side)
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
+    adm_state = admission.init_state(adm.window) if adm.enabled else None
+    fdraws = ([fm.draw(m, rnd, fed.seed) for rnd in range(fed.rounds)]
+              if fm.active else None)
 
     # ---- byte pricing: identical to the device engines, from eval_shape
     pop_struct = jax.tree.map(
@@ -432,7 +523,11 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
         (task.base, task.cfg),
         ("cohort", strategy.name, fed.lr, fed.local_steps, fed.batch_size,
          fed.pfedme_eta, fed.self_weight, use_data, use_model,
-         fed.uplink_codec, fed.seed if compressed else None),
+         fed.uplink_codec, fed.seed if compressed else None,
+         fed.fault_crash, fed.fault_loss, fed.fault_corrupt,
+         fed.fault_corrupt_mode, fed.fault_divergent,
+         fed.fault_divergent_scale, fed.admission, fed.admission_norm_mult,
+         fed.admission_window),
         lambda: _build_cohort_fn(strategy, fed, local_fit,
                                  use_data, use_model))
     veval = _COHORT_EVAL_CACHE.get_or_build(
@@ -455,6 +550,7 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
     hist_loss: list = []
     hist_accs: list = []
     hist_wall: list = []
+    hist_acc_rows: list = []       # per-round (m,) accepted-upload masks
     start = 0
     if scan_engine and fed.checkpoint_path and fed.resume:
         if not os.path.exists(fed.checkpoint_path):
@@ -469,8 +565,10 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
                                  f"in metadata)")
             ckpt.check_fingerprint(
                 fed.checkpoint_path, meta, fed_engine._fingerprint(fed),
-                defaults={"uplink_codec": "none", "eval_every": 1,
-                          "client_store": "device", "attn_impl": "auto"},
+                defaults=dict({"uplink_codec": "none", "eval_every": 1,
+                               "client_store": "device",
+                               "attn_impl": "auto"},
+                              **fed_engine.ROBUSTNESS_DEFAULTS),
                 ignore=("rounds",))
             start = int(meta["rounds_done"])
             if start > fed.rounds:
@@ -482,11 +580,22 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
                     "wall": np.zeros((start,), np.float32)}
             if s_model is not None:
                 like["s_model"] = np.zeros(s_model.shape, np.float32)
+            if adm_state is not None:
+                like["admission"] = {"meds": np.zeros((adm.window,),
+                                                      np.float32),
+                                     "count": np.zeros((), np.int32)}
+            if robust:
+                like["accept"] = np.zeros((start, m), bool)
             tree = ckpt.restore(fed.checkpoint_path, like, as_numpy=True)
             store.load(tree["state"])
             bank, ef_bank = _build_banks()   # bank rows = current Cs
             if s_model is not None:
                 s_model = jnp.asarray(tree["s_model"])
+            if adm_state is not None:
+                adm_state = jax.tree.map(jnp.asarray, tree["admission"])
+            if robust:
+                hist_acc_rows = [np.asarray(row, bool)
+                                 for row in tree["accept"]]
             hist_loss = [float(v) for v in tree["loss"]]
             hist_accs = [list(map(float, row)) for row in tree["accs"]]
             hist_wall = [float(v) for v in tree["wall"]]
@@ -505,23 +614,49 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
                 "wall": np.asarray(hist_wall, np.float32)}
         if s_model is not None:
             tree["s_model"] = np.asarray(s_model)
+        if adm_state is not None:
+            tree["admission"] = jax.tree.map(np.asarray, adm_state)
+        if robust:
+            tree["accept"] = np.asarray(hist_acc_rows, bool)
         ckpt.save(fed.checkpoint_path, tree,
                   metadata=dict(fed_engine._fingerprint(fed), engine="scan",
                                 strategy=strategy.name,
                                 rounds_done=rounds_done))
 
+    def _round_stats(rnd: int, plan, accept_row) -> tuple:
+        """(n_up, n_down, rejected_ids, failed_ids) — the robust history
+        fields; the fault-free values when ``robust`` is off."""
+        if not robust:
+            return (plan.n_participants, plan.n_participants, [], [])
+        pm = plan.mask(m)
+        if fm.active:
+            fd = fdraws[rnd]
+            sent = pm & ~fd.crash
+            delivered = sent & ~fd.loss
+            failed = np.nonzero(pm & (fd.crash | fd.loss))[0].tolist()
+        else:
+            sent = delivered = pm
+            failed = []
+        acc = np.asarray(accept_row, bool)
+        n_down = int(acc.sum()) if communicates else plan.n_participants
+        return (int(sent.sum()), n_down,
+                np.nonzero(delivered & ~acc)[0].tolist(), failed)
+
     history: list = []
     for rnd in range(start):
         plan = plans[rnd]
+        n_up, n_down, rejected, failed = _round_stats(
+            rnd, plan, hist_acc_rows[rnd] if robust else None)
         history.append(RoundRecord(
             rnd, hist_loss[rnd], hist_accs[rnd],
-            uplink_bytes=per_b * plan.n_participants,
-            downlink_bytes=per_down_b * plan.n_participants,
+            uplink_bytes=per_b * n_up,
+            downlink_bytes=per_down_b * n_down,
             wall_s=hist_wall[rnd],
             participants=plan.participants.tolist(),
             sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
-            uplink_elems=per_e * plan.n_participants,
-            evaluated=_do_eval(rnd, fed)))
+            uplink_elems=per_e * n_up,
+            evaluated=_do_eval(rnd, fed),
+            rejected=rejected, failed=failed))
 
     accs = hist_accs[-1][:] if start else [0.0] * m
     rounds_left = list(range(start, fed.rounds))
@@ -553,10 +688,19 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
                   jnp.asarray(plan.mask(m)),
                   jnp.asarray(plan.sampled.astype(np.int32)),
                   jnp.asarray(rnd, jnp.int32))
-            cohort, bank, ef_bank, s_model, loss = step(
-                cohort, bank, ef_bank, s_model, xs, consts)
+            if fm.active:
+                fd = fdraws[rnd]
+                xs = xs + tuple(jnp.asarray(f[plan.sampled]) for f in
+                                (fd.crash, fd.loss, fd.corrupt, fd.divergent))
+            cohort, bank, ef_bank, s_model, adm_state, loss, accept_l = step(
+                cohort, bank, ef_bank, s_model, adm_state, xs, consts)
             loss = float(loss)                 # host sync before write-back
             store.scatter(plan.cohort, cohort)
+            accept_row = None
+            if robust:
+                accept_row = np.zeros(m, bool)
+                accept_row[plan.sampled] = np.asarray(accept_l)
+                hist_acc_rows.append(accept_row)
             evaluated = _do_eval(rnd, fed)
             if evaluated:
                 accs = eval_population()
@@ -564,16 +708,19 @@ def run_cohort(*, task, fed, strategy, states: list, loaders: Sequence,
             hist_loss.append(loss)
             hist_accs.append(list(accs))
             hist_wall.append(t_done - t0)
+            n_up, n_down, rejected, failed = _round_stats(rnd, plan,
+                                                          accept_row)
             history.append(RoundRecord(
                 rnd, loss, list(accs),
-                uplink_bytes=per_b * plan.n_participants,
-                downlink_bytes=per_down_b * plan.n_participants,
+                uplink_bytes=per_b * n_up,
+                downlink_bytes=per_down_b * n_down,
                 wall_s=t_done - t0,
                 participants=plan.participants.tolist(),
                 sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
-                uplink_elems=per_e * plan.n_participants,
+                uplink_elems=per_e * n_up,
                 host_s=t_fetch - t0, device_s=t_done - t_fetch,
-                evaluated=evaluated))
+                evaluated=evaluated,
+                rejected=rejected, failed=failed))
             if verbose:
                 _print_round(strategy, history[-1])
             if scan_engine and fed.checkpoint_path and \

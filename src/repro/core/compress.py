@@ -233,6 +233,13 @@ def encode_stacked(codec: Codec, payload: Any, ef: Any, keys: jax.Array
         payload, ef, keys)
 
 
+def decode_stacked(codec: Codec, enc: dict, like: Any) -> Any:
+    """Row-wise :func:`decode` of a stacked wire pytree (every leaf
+    carries a leading client axis) — what the fault layer uses to
+    re-decode a bit-flipped wire tree into the server's view."""
+    return jax.vmap(lambda e, l: decode(codec, e, l))(enc, like)
+
+
 def wire_struct(codec: Codec, payload_struct: Any, m: int) -> Any:
     """``jax.eval_shape`` of the stacked wire pytree — how the scan engine
     prices a whole run's traffic without touching the device (the encoded

@@ -1,0 +1,217 @@
+"""Seeded fault injection for the federated runtime (DESIGN.md §16).
+
+Cross-device deployments fail in ways the §8 straggler *drop* does not
+model: devices crash mid-round before uploading, uplinks vanish in
+transit, payloads arrive mangled, and a client's local fit occasionally
+diverges and ships a blown-up update.  This module makes those events a
+first-class, *deterministic* object beside :class:`~repro.core.sampling.
+LatencyModel`: a frozen :class:`FaultModel` maps ``(seed, round, client,
+attempt)`` to per-event booleans via ``np.random.default_rng((seed, rnd,
+client, _FAULT_TAG, attempt))`` — no hidden RNG state, so every engine
+(eager loop / vmap, scan, cohort, async) sees the identical fault
+schedule for a given config, and re-running a round re-derives it.
+
+Event taxonomy (each an independent Bernoulli per (round, client)):
+
+* ``crash`` — the device dies BEFORE uploading: its local work is lost
+  (resident state rolls back to the round start), nothing crosses the
+  wire, no bytes are priced.  The async engine instead re-queues the
+  client through its deferral queue.
+* ``loss`` — the upload is sent (bytes ARE priced) but never arrives;
+  the server aggregates without it.  The async engine maps loss into
+  its timeout/retry machinery.
+* ``corrupt`` — the upload arrives mangled: NaN-fill, Inf-fill, or a
+  bit-flip on the encoded wire tree (``corrupt_mode``).  Admission
+  control (:mod:`repro.core.admission`) is what keeps the mangled rows
+  out of the aggregate.
+* ``divergent`` — the local fit blew up: the uplink carries a
+  ``divergent_scale``-scaled payload (huge but finite — this is what
+  the norm gate must catch) and the client's resident state reverts to
+  the round start (local divergence detection restarts from the last
+  good state).
+
+All rates default to 0.0; :attr:`FaultModel.active` is then False and
+every engine takes its legacy code path untouched, so ``faults=none``
+is bit-for-bit the pre-fault runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress
+
+FAULT_EVENTS = ("crash", "loss", "corrupt", "divergent")
+CORRUPT_MODES = ("nan", "inf", "bitflip")
+
+# fold key separating fault draws from the sampler / straggler / latency
+# streams of repro.core.sampling.
+_FAULT_TAG = 0xFA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDraw:
+    """One round's fault outcome: four (m,) boolean event masks."""
+    crash: np.ndarray
+    loss: np.ndarray
+    corrupt: np.ndarray
+    divergent: np.ndarray
+
+    @classmethod
+    def none(cls, m: int) -> "FaultDraw":
+        z = np.zeros(m, bool)
+        return cls(z, z.copy(), z.copy(), z.copy())
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Seeded per-(round, client) fault events (all rates in [0, 1))."""
+    crash: float = 0.0
+    loss: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    divergent: float = 0.0
+    divergent_scale: float = 1e4
+
+    def __post_init__(self):
+        for name in ("crash", "loss", "corrupt", "divergent"):
+            rate = getattr(self, name)
+            if not 0.0 <= rate < 1.0:
+                raise ValueError(
+                    f"fault_{name} rate must be in [0, 1); got {rate}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"fault_corrupt_mode={self.corrupt_mode!r}; "
+                             f"expected one of {CORRUPT_MODES}")
+        if self.divergent_scale <= 1.0:
+            raise ValueError(f"fault_divergent_scale must be > 1; "
+                             f"got {self.divergent_scale}")
+
+    @property
+    def active(self) -> bool:
+        """True iff any event can fire — engines gate EVERY fault-path op
+        on this so the inactive trace is identical to the legacy one."""
+        return (self.crash > 0 or self.loss > 0 or self.corrupt > 0
+                or self.divergent > 0)
+
+    def draw_one(self, rnd: int, client: int, seed: int, attempt: int = 0
+                 ) -> tuple[bool, bool, bool, bool]:
+        """One (round, client) draw → (crash, loss, corrupt, divergent).
+        ``attempt`` keys async re-dispatches so a retried client re-rolls
+        its fate instead of failing forever."""
+        if not self.active:
+            return (False, False, False, False)
+        rng = np.random.default_rng(
+            (seed, int(rnd), int(client), _FAULT_TAG, int(attempt)))
+        u = rng.random(4)
+        return (bool(u[0] < self.crash), bool(u[1] < self.loss),
+                bool(u[2] < self.corrupt), bool(u[3] < self.divergent))
+
+    def draw(self, m: int, rnd: int, seed: int, attempt: int = 0
+             ) -> FaultDraw:
+        """All m clients' events for one round — elementwise identical to
+        :meth:`draw_one` per client (loop ⇄ vmap ⇄ scan parity)."""
+        if not self.active:
+            return FaultDraw.none(m)
+        out = np.zeros((4, m), bool)
+        for i in range(m):
+            out[:, i] = self.draw_one(rnd, i, seed, attempt)
+        return FaultDraw(out[0], out[1], out[2], out[3])
+
+
+def fault_model_of(fed: Any) -> FaultModel:
+    """Build the :class:`FaultModel` from a ``FedConfig``-like object
+    (validates the ``fault_*`` knobs as a side effect)."""
+    return FaultModel(crash=fed.fault_crash, loss=fed.fault_loss,
+                      corrupt=fed.fault_corrupt,
+                      corrupt_mode=fed.fault_corrupt_mode,
+                      divergent=fed.fault_divergent,
+                      divergent_scale=fed.fault_divergent_scale)
+
+
+# ---------------------------------------------------------------------------
+# payload mangling (pure, jittable — safe inside scan/cohort round bodies)
+# ---------------------------------------------------------------------------
+
+def _row_mask(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def scale_rows(tree: Any, mask: jnp.ndarray, scale: float) -> Any:
+    """Multiply rows ``mask`` of a stacked payload by ``scale`` — the
+    divergent-fit blowup (huge but finite)."""
+    return jax.tree.map(
+        lambda l: jnp.where(_row_mask(mask, l), l * scale, l), tree)
+
+
+def _flip_leaf(l: jnp.ndarray) -> jnp.ndarray:
+    """Flip one high bit of the leaf's wire representation: bit 6 of int
+    codes (sign-adjacent magnitude bit; hits the packed high nibble for
+    int4), a high exponent bit for the float dtypes."""
+    if l.dtype in (jnp.int8.dtype, jnp.uint8.dtype):
+        return jnp.bitwise_xor(l, jnp.asarray(0x40, l.dtype))
+    if l.dtype == jnp.bfloat16.dtype:
+        bits = jax.lax.bitcast_convert_type(l, jnp.uint16)
+        return jax.lax.bitcast_convert_type(
+            jnp.bitwise_xor(bits, jnp.asarray(1 << 14, jnp.uint16)),
+            jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(l.astype(jnp.float32), jnp.uint32)
+    return jax.lax.bitcast_convert_type(
+        jnp.bitwise_xor(bits, jnp.asarray(1 << 30, jnp.uint32)),
+        jnp.float32).astype(l.dtype)
+
+
+def bitflip_wire(enc: dict) -> dict:
+    """Bit-flip every code leaf of an encoded wire tree (scales intact)."""
+    return {"codes": jax.tree.map(_flip_leaf, enc["codes"]),
+            "scales": enc["scales"]}
+
+
+def corrupt_rows(tree: Any, mask: jnp.ndarray, mode: str) -> Any:
+    """Mangle rows ``mask`` of a stacked f32 payload in-transit."""
+    def leaf(l):
+        if mode == "nan":
+            bad = jnp.full_like(l, jnp.nan)
+        elif mode == "inf":
+            bad = jnp.full_like(l, jnp.inf)
+        else:
+            bad = _flip_leaf(l)
+        return jnp.where(_row_mask(mask, l), bad, l)
+    return jax.tree.map(leaf, tree)
+
+
+def corrupt_served(codec, enc: dict, served: Any, mask: jnp.ndarray,
+                   mode: str) -> Any:
+    """The server's decoded view of a round's uploads with rows ``mask``
+    corrupted in transit.  ``mode="bitflip"`` under a real codec flips the
+    ENCODED wire tree and re-decodes (the server sees what a flipped wire
+    bit dequantizes to); otherwise the mangling applies to the decoded
+    rows directly."""
+    if mode == "bitflip" and codec is not None and not codec.is_identity:
+        bad = compress.decode_stacked(codec, bitflip_wire(enc), served)
+        return jax.tree.map(
+            lambda g, b: jnp.where(_row_mask(mask, g), b, g), served, bad)
+    return corrupt_rows(served, mask, mode)
+
+
+def corrupt_one(codec, enc: dict, served: Any, mode: str) -> Any:
+    """Single-client variant of :func:`corrupt_served` (the eager loop
+    path): the WHOLE tree is the corrupted upload."""
+    if mode == "bitflip" and codec is not None and not codec.is_identity:
+        return compress.decode(codec, bitflip_wire(enc), served)
+    if mode == "nan":
+        return jax.tree.map(lambda l: jnp.full_like(l, jnp.nan), served)
+    if mode == "inf":
+        return jax.tree.map(lambda l: jnp.full_like(l, jnp.inf), served)
+    return jax.tree.map(_flip_leaf, served)
+
+
+def zero_rows(tree: Any, keep: jnp.ndarray) -> Any:
+    """Zero every row NOT in ``keep``.  Rejected/undelivered rows may hold
+    NaN/Inf; their aggregation weight is 0, but ``0 × NaN = NaN`` would
+    still poison the einsum — so the server sanitizes before aggregating."""
+    return jax.tree.map(
+        lambda l: jnp.where(_row_mask(keep, l), l, jnp.zeros_like(l)), tree)

@@ -88,12 +88,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core import (aggregation, client_batch, client_store, comm,
-                        compress, sampling, tri_lora)
+from repro.core import (admission, aggregation, client_batch, client_store,
+                        comm, compress, faults, sampling, tri_lora)
 from repro.core.jit_cache import JitCache
 from repro.core.similarity import cka
 
 _SCAN_CACHE = JitCache(maxsize=8)
+
+# Pre-§16 checkpoints carry no fault/admission knobs; they were written by
+# the fault-free runtime, which is exactly what these defaults assert.
+# Shared by every engine's fingerprint check (scan / cohort / async).
+ROBUSTNESS_DEFAULTS = {
+    "fault_crash": 0.0, "fault_loss": 0.0, "fault_corrupt": 0.0,
+    "fault_corrupt_mode": "nan", "fault_divergent": 0.0,
+    "fault_divergent_scale": 1e4, "admission": "none",
+    "admission_norm_mult": 10.0, "admission_window": 8,
+}
 
 # FedConfig fields that must match between a checkpoint and the run
 # resuming from it — anything that changes the per-round math or the
@@ -108,7 +118,10 @@ _FINGERPRINT_FIELDS = ("method", "n_clients", "rounds", "local_steps",
                        "sampler", "straggler_frac", "use_data_sim",
                        "use_model_sim", "cka_probes", "self_weight",
                        "pfedme_eta", "uplink_codec", "eval_every",
-                       "client_store", "attn_impl")
+                       "client_store", "attn_impl",
+                       # §16: the fault schedule and the admission decisions
+                       # are part of the stored state's meaning
+                       ) + tuple(ROBUSTNESS_DEFAULTS)
 
 
 def _fingerprint(fed) -> dict:
@@ -134,14 +147,25 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
     eta = fed.pfedme_eta
     self_weight = fed.self_weight
     codec = compress.get_codec(fed.uplink_codec)
-    compressed = not codec.is_identity and strategy.aggregate != "none"
+    communicates = strategy.aggregate != "none"
+    compressed = not codec.is_identity and communicates
     seed = fed.seed
     m = fed.n_clients
     eval_every = max(1, int(fed.eval_every))
+    # §16 robustness: fault events and the admission gate.  Every new graph
+    # op below is gated on these STATIC flags, so the inactive config traces
+    # the legacy round program unchanged.
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
 
     def round_step(carry, xs, consts):
-        stacked, s_model, prev_accs = carry
-        toks, labs, smask, pmask, sampled_ids, rnd = xs
+        stacked, s_model, prev_accs, adm_state = carry
+        if fm.active:
+            (toks, labs, smask, pmask, sampled_ids, rnd,
+             f_crash, f_loss, f_corrupt, f_div) = xs
+        else:
+            toks, labs, smask, pmask, sampled_ids, rnd = xs
         tr = strategy.trainable(stacked)
         w_ref = stacked.get("w", {})
         # all m always train (static shapes); the select below freezes the
@@ -151,22 +175,54 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
         new = dict(stacked)
         new.update(tr)
         new = strategy.after_local(new, eta)
-        stacked = client_batch.select_clients(smask, new, prev)
+        sel = smask
+        if fm.active:
+            # crash: the round's local work is lost; divergent: the client's
+            # divergence detection resets to the round start
+            sel = smask & ~f_crash & ~f_div
+        stacked = client_batch.select_clients(sel, new, prev)
 
         payload = strategy.uplink(stacked)
+        if fm.active and communicates and fm.divergent > 0:
+            # the divergent upload is the blowup the norm gate must catch
+            payload = faults.scale_rows(payload, smask & f_div,
+                                        fm.divergent_scale)
+        if fm.active:
+            sent = pmask & ~f_crash          # left the device at all
+            delivered = sent & ~f_loss       # reached the server
+        else:
+            delivered = pmask
+        enc = None
         if compressed:
             # error-compensated quantized uplink (DESIGN.md §10): the same
             # per-(round, client) key stream as the eager engine, the EF
             # residual joining the scanned carry via the stacked state, the
             # server consuming the DEQUANTIZED payload
-            _, dec, ef_new = compress.encode_stacked(
+            enc, dec, ef_new = compress.encode_stacked(
                 codec, payload, stacked["ef"],
                 compress.client_keys(seed, rnd, m))
-            stacked = dict(stacked, ef=client_batch.select_clients(
-                pmask, ef_new, stacked["ef"]))
+            if not robust:
+                stacked = dict(stacked, ef=client_batch.select_clients(
+                    pmask, ef_new, stacked["ef"]))
             served = dec
         else:
             served = payload
+        if fm.active and communicates and fm.corrupt > 0:
+            served = faults.corrupt_served(codec if compressed else None,
+                                           enc, served, delivered & f_corrupt,
+                                           fm.corrupt_mode)
+        accept = delivered
+        if robust and communicates:
+            if adm.enabled:
+                norms, finite = admission.payload_stats(served)
+                accept, adm_state = admission.admit(norms, finite, delivered,
+                                                    adm_state, adm)
+            if compressed:
+                # EF advances only for ACCEPTED uploads — rejection rolls
+                # the residual back by never installing the new one
+                stacked = dict(stacked, ef=client_batch.select_clients(
+                    accept, ef_new, stacked["ef"]))
+        agg_mask = accept if robust and communicates else pmask
         weights = None
         if strategy.aggregate == "personalized":
             sims = []
@@ -174,20 +230,37 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
                 sims.append(consts["s_data"])
             if use_model:
                 cs = cka.stacked_cs(
-                    served if compressed
+                    served if compressed or robust
                     else tri_lora.tree_payload(stacked["adapter"]))
-                s_model = cka.refresh_rows_inline(s_model, cs, sampled_ids,
-                                                  consts["probes"])
+                refreshed = cka.refresh_rows_inline(s_model, cs, sampled_ids,
+                                                    consts["probes"])
+                if robust:
+                    # refresh only ACCEPTED rows; a pair touching a sampled-
+                    # but-unaccepted client (its served C is corrupt, lost,
+                    # or stale) keeps its previous entry
+                    clean = jnp.logical_not(smask) | accept
+                    valid = ((accept[:, None] & clean[None, :])
+                             | (accept[None, :] & clean[:, None]))
+                    s_model = jnp.where(valid, refreshed, s_model)
+                else:
+                    s_model = refreshed
                 sims.append(s_model)
-            assert sims, "celora needs at least one similarity term"
+            if not sims:
+                raise ValueError(
+                    f"celora needs at least one similarity term; got "
+                    f"use_data_sim={use_data}, use_model_sim={use_model}")
             weights = aggregation.personalized_weights(sum(sims), self_weight,
-                                                       pmask)
+                                                       agg_mask)
+        if robust and communicates:
+            # rejected/undelivered rows may hold NaN/Inf; their weight is 0
+            # but 0 x NaN still poisons the aggregation einsum
+            served = faults.zero_rows(served, accept)
         down = strategy.server_stacked(served,
                                        sample_counts=consts["counts"],
-                                       weights=weights, participants=pmask)
+                                       weights=weights, participants=agg_mask)
         if down is not None:
             stacked = client_batch.select_clients(
-                pmask, strategy.install(stacked, down), stacked)
+                agg_mask, strategy.install(stacked, down), stacked)
 
         if eval_every == 1:
             # bit-for-bit the always-eval program (the eval_every=1 contract)
@@ -205,7 +278,8 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
                 lambda s: prev_accs, stacked)
         sm = smask.astype(losses.dtype)
         loss = jnp.sum(losses * sm) / jnp.maximum(jnp.sum(sm), 1.0)
-        return (stacked, s_model, accs), (loss, accs)
+        ys = (loss, accs, accept) if robust else (loss, accs)
+        return (stacked, s_model, accs, adm_state), ys
 
     def _scan(carry, xs, consts):
         return jax.lax.scan(lambda c, x: round_step(c, x, consts), carry, xs)
@@ -216,31 +290,41 @@ def _build_chunk_fn(strategy, fed, local_fit: Callable, eval_one: Callable,
 
 
 def _save_state(fed, stacked, s_model, losses, accs, walls,
-                rounds_done: int, strategy) -> None:
+                rounds_done: int, strategy, adm_state=None,
+                accepts=None) -> None:
     tree = {"state": stacked,
             "loss": np.asarray(losses, np.float32),
             "accs": np.asarray(accs, np.float32),
             "wall": np.asarray(walls, np.float32)}
     if s_model is not None:
         tree["s_model"] = s_model
+    if adm_state is not None:
+        # the admission gate's median ring rides the carry; kill-then-resume
+        # mid-fault-storm must reproduce the admission decisions exactly
+        tree["admission"] = adm_state
+    if accepts is not None:
+        tree["accept"] = np.asarray(accepts, bool)
     ckpt.save(fed.checkpoint_path, tree,
               metadata=dict(_fingerprint(fed), engine="scan",
                             strategy=strategy.name, rounds_done=rounds_done))
 
 
-def _load_state(fed, stacked, s_model, m: int):
+def _load_state(fed, stacked, s_model, m: int, adm_state=None,
+                robust: bool = False):
     """Restore a chunk-boundary checkpoint into (stacked, s_model, history
-    arrays, rounds_done), validating the run fingerprint first."""
+    arrays, rounds_done, adm_state, accept history), validating the run
+    fingerprint first."""
     meta = ckpt.metadata(fed.checkpoint_path)
     if "rounds_done" not in meta:
         raise ValueError(f"{fed.checkpoint_path!r} is not a scan-engine "
                          f"checkpoint (no rounds_done in metadata)")
     ckpt.check_fingerprint(
         fed.checkpoint_path, meta, _fingerprint(fed),
-        defaults={"uplink_codec": "none",      # pre-codec checkpoints
-                  "eval_every": 1,             # pre-§11 checkpoints
-                  "client_store": "device",    # pre-§12 checkpoints
-                  "attn_impl": "auto"},        # pre-§14 checkpoints
+        defaults=dict({"uplink_codec": "none",     # pre-codec checkpoints
+                       "eval_every": 1,            # pre-§11 checkpoints
+                       "client_store": "device",   # pre-§12 checkpoints
+                       "attn_impl": "auto"},       # pre-§14 checkpoints
+                      **ROBUSTNESS_DEFAULTS),      # pre-§16 checkpoints
         ignore=("rounds",))
     rounds_done = int(meta["rounds_done"])
     if rounds_done > fed.rounds:
@@ -252,9 +336,14 @@ def _load_state(fed, stacked, s_model, m: int):
             "wall": np.zeros((rounds_done,), np.float32)}
     if s_model is not None:
         like["s_model"] = s_model
+    if adm_state is not None:
+        like["admission"] = adm_state
+    if robust:
+        like["accept"] = np.zeros((rounds_done, m), bool)
     tree = ckpt.restore(fed.checkpoint_path, like)
     return (tree["state"], tree.get("s_model"), tree["loss"], tree["accs"],
-            tree["wall"], rounds_done)
+            tree["wall"], rounds_done, tree.get("admission"),
+            tree.get("accept"))
 
 
 def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
@@ -284,7 +373,27 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
 
     pstack = sampling.stack_plans(plans, m)
     codec = compress.get_codec(fed.uplink_codec)
-    compressed = not codec.is_identity and strategy.aggregate != "none"
+    communicates = strategy.aggregate != "none"
+    compressed = not codec.is_identity and communicates
+
+    # §16 robustness: the host-precomputed fault schedule (seeded, round-
+    # keyed — identical to the eager engine's per-round draws) and the
+    # admission gate state that rides the scan carry
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
+    fstack = None
+    if fm.active:
+        draws = [fm.draw(m, rnd, fed.seed) for rnd in range(fed.rounds)]
+        fstack = (np.stack([d.crash for d in draws]),
+                  np.stack([d.loss for d in draws]),
+                  np.stack([d.corrupt for d in draws]),
+                  np.stack([d.divergent for d in draws]))
+        sent_mask_np = pstack.participant_mask & ~fstack[0]
+        delivered_mask_np = sent_mask_np & ~fstack[1]
+    else:
+        sent_mask_np = delivered_mask_np = pstack.participant_mask
+    adm_state = admission.init_state(adm.window) if adm.enabled else None
     # uplink bytes are priced on the ENCODED payload pytree (codes +
     # scales); the downlink stays the raw payload (the server broadcasts
     # full-precision aggregates).  Both structures are round-invariant, so
@@ -329,7 +438,12 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
          # pointless recompile per seed in variance sweeps
          fed.uplink_codec, fed.seed if compressed else None,
          # pipeline knobs that change the traced/compiled program
-         bool(fed.scan_donate), max(1, int(fed.eval_every))),
+         bool(fed.scan_donate), max(1, int(fed.eval_every)),
+         # §16 fault/admission knobs gate new graph ops (trace-changing)
+         fed.fault_crash, fed.fault_loss, fed.fault_corrupt,
+         fed.fault_corrupt_mode, fed.fault_divergent,
+         fed.fault_divergent_scale, fed.admission, fed.admission_norm_mult,
+         fed.admission_window),
         lambda: _build_chunk_fn(strategy, fed, local_fit, eval_one,
                                 use_data, use_model))
 
@@ -345,11 +459,17 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         warnings.warn(f"resume: no checkpoint at {fed.checkpoint_path!r} — "
                       f"starting from round 0 (checkpoints will be written "
                       f"there)")
+    hist_accept: list = []
     if fed.checkpoint_path and fed.resume and \
             os.path.exists(fed.checkpoint_path):
-        stacked, s_model, l0, a0, w0, start = _load_state(fed, stacked,
-                                                          s_model, m)
+        (stacked, s_model, l0, a0, w0, start,
+         adm0, acc0) = _load_state(fed, stacked, s_model, m, adm_state,
+                                   robust)
         stacked = put(stacked)
+        if adm0 is not None:
+            adm_state = jax.tree.map(jnp.asarray, adm0)
+        if acc0 is not None:
+            hist_accept = [np.asarray(row, bool) for row in np.asarray(acc0)]
         hist_loss = [float(v) for v in l0]
         hist_accs = [list(map(float, row)) for row in a0]
         hist_wall = [float(v) for v in w0]
@@ -369,7 +489,7 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
     # repeat the last evaluated row; on resume that is the last history row
     accs0 = (jnp.asarray(np.asarray(hist_accs[-1], np.float32)) if start
              else jnp.zeros((m,), jnp.float32))
-    carry = (stacked, s_model, accs0)
+    carry = (stacked, s_model, accs0, adm_state)
 
     def dispatch(carry, batches, c0, c1):
         toks, labs = batches
@@ -378,12 +498,18 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
               jnp.asarray(pstack.participant_mask[c0:c1]),
               jnp.asarray(pstack.sampled_ids[c0:c1]),
               jnp.arange(c0, c1, dtype=jnp.int32))
-        carry, (losses, accs) = run_chunk(carry, xs, consts)
+        if fm.active:
+            xs = xs + tuple(jnp.asarray(f[c0:c1]) for f in fstack)
+        carry, ys = run_chunk(carry, xs, consts)
         # the chunk's ONE host sync
-        return carry, (np.asarray(losses), np.asarray(accs))
+        return carry, tuple(np.asarray(y) for y in ys)
 
     def on_chunk(carry, c0, c1, out, host_s, device_s, wall_s):
-        losses, accs = out
+        if robust:
+            losses, accs, acc_rows = out
+            hist_accept.extend(np.asarray(row, bool) for row in acc_rows)
+        else:
+            losses, accs = out
         hist_loss.extend(float(v) for v in losses)
         hist_accs.extend(list(map(float, row)) for row in accs)
         hist_wall.extend([wall_s] * (c1 - c0))
@@ -391,7 +517,8 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         hist_dev.extend([device_s] * (c1 - c0))
         if fed.checkpoint_path:
             _save_state(fed, carry[0], carry[1], hist_loss, hist_accs,
-                        hist_wall, c1, strategy)
+                        hist_wall, c1, strategy, adm_state=carry[3],
+                        accepts=np.stack(hist_accept) if robust else None)
         if verbose:
             print(f"[{strategy.name}] rounds {c0:3d}–{c1 - 1:3d} "
                   f"loss {hist_loss[-1]:.4f} "
@@ -408,18 +535,35 @@ def run_scan(*, task, fed, strategy, states: list, loaders: Sequence,
         donate=fed.scan_donate, prefetch=fed.scan_prefetch)
 
     eval_every = max(1, int(fed.eval_every))
+
+    def _n_up(rnd: int) -> int:
+        # robust mode prices the uploads that actually left a device
+        # (crashed clients transmit nothing; lost/rejected ones did pay)
+        return (int(sent_mask_np[rnd].sum()) if robust
+                else int(pstack.n_participants[rnd]))
+
+    def _n_down(rnd: int) -> int:
+        return (int(np.sum(hist_accept[rnd])) if robust and communicates
+                else int(pstack.n_participants[rnd]))
+
     history = [
         RoundRecord(
             rnd, hist_loss[rnd], hist_accs[rnd],
-            uplink_bytes=per_b * int(pstack.n_participants[rnd]),
-            downlink_bytes=per_down_b * int(pstack.n_participants[rnd]),
+            uplink_bytes=per_b * _n_up(rnd),
+            downlink_bytes=per_down_b * _n_down(rnd),
             wall_s=hist_wall[rnd],
             participants=plans[rnd].participants.tolist(),
             sampled=plans[rnd].sampled.tolist(),
             dropped=plans[rnd].dropped.tolist(),
-            uplink_elems=per_e * int(pstack.n_participants[rnd]),
+            uplink_elems=per_e * _n_up(rnd),
             host_s=hist_host[rnd], device_s=hist_dev[rnd],
-            evaluated=(rnd % eval_every == 0 or rnd == fed.rounds - 1))
+            evaluated=(rnd % eval_every == 0 or rnd == fed.rounds - 1),
+            rejected=(np.nonzero(delivered_mask_np[rnd]
+                                 & ~hist_accept[rnd])[0].tolist()
+                      if robust and communicates else []),
+            failed=(np.nonzero(pstack.participant_mask[rnd]
+                               & (fstack[0][rnd] | fstack[1][rnd]))[0]
+                    .tolist() if fm.active else []))
         for rnd in range(fed.rounds)]
 
     states = client_batch.unstack_states(carry[0])

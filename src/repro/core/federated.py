@@ -84,8 +84,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (aggregation, client_batch, client_store, comm,
-                        compress, sampling, tri_lora)
+from repro.core import (admission, aggregation, client_batch, client_store,
+                        comm, compress, faults, sampling, tri_lora)
 from repro.core.baselines import Strategy, get_strategy
 from repro.core.fed_model import FedTask
 from repro.core.jit_cache import JitCache
@@ -161,6 +161,21 @@ class FedConfig:
     self_weight: float = 0.0          # beyond-paper: λ self-mixing (0=faithful)
     # --- pFedMe -------------------------------------------------------------
     pfedme_eta: float = 0.5
+    # --- fault injection (repro.core.faults, DESIGN.md §16) -----------------
+    fault_crash: float = 0.0          # P[crash before upload] per (rnd, client)
+    fault_loss: float = 0.0           # P[uplink lost in transit]
+    fault_corrupt: float = 0.0        # P[uplink mangled in transit]
+    fault_corrupt_mode: str = "nan"   # "nan" | "inf" | "bitflip"
+    fault_divergent: float = 0.0      # P[local fit diverges]
+    fault_divergent_scale: float = 1e4  # divergent payload blowup factor
+    # --- server-side uplink admission (repro.core.admission, §16) -----------
+    admission: str = "none"           # "none" | "norm"
+    admission_norm_mult: float = 10.0  # reject ||up|| > mult x running median
+    admission_window: int = 8         # ring of accepted round medians
+    # --- async retry/timeout/backoff (repro.core.async_engine, §16) ---------
+    dispatch_timeout: float = 0.0     # virtual-clock upload timeout (0 = off)
+    retry_backoff: float = 1.0        # exponential backoff base delay
+    retry_cap: int = 3                # retries before a permanent drop
 
 
 @dataclasses.dataclass
@@ -182,6 +197,10 @@ class RoundRecord:
     device_s: float = 0.0  # time in device compute + the history sync
     evaluated: bool = True  # False: accs carried from the last eval round
     #                         (fed.eval_every > 1 off-cadence rounds)
+    rejected: list = dataclasses.field(default_factory=list)  # delivered but
+    #                         refused by admission control (bytes priced)
+    failed: list = dataclasses.field(default_factory=list)    # crashed / lost
+    #                         / permanently dropped uploads this round
 
     @property
     def uplink_floats(self) -> int:
@@ -322,7 +341,9 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     if not 0.0 <= fed.straggler_frac < 1.0:
         raise ValueError(f"straggler_frac must be in [0, 1); "
                          f"got {fed.straggler_frac}")
-    assert len(client_train) == m
+    if len(client_train) != m:
+        raise ValueError(f"n_clients={m} but {len(client_train)} client "
+                         f"training sets were provided")
     # attention backend (DESIGN.md §14): FedConfig.attn_impl overrides the
     # task config; the resolved name lands back on task.cfg, so every
     # compiled-program cache keyed on (base, cfg) — local fit, eval, the
@@ -339,6 +360,26 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
     # identity codec the runtime below takes its legacy paths untouched
     # (bit-for-bit the pre-codec behavior, no EF state)
     compressed = not codec.is_identity and strategy.aggregate != "none"
+    # ---- fault injection + admission control (DESIGN.md §16).  Both
+    # validate their FedConfig knobs as a side effect; `robust` gates every
+    # fault-path op below so the inactive config keeps the legacy program.
+    fm = faults.fault_model_of(fed)
+    adm = admission.control_of(fed)
+    robust = fm.active or adm.enabled
+    if adm.enabled and strategy.aggregate == "none":
+        raise ValueError(f"admission control needs an aggregating method; "
+                         f"method={fed.method!r} has no uplink to admit")
+    if fed.dispatch_timeout < 0:
+        raise ValueError(f"dispatch_timeout must be >= 0; "
+                         f"got {fed.dispatch_timeout}")
+    if fed.dispatch_timeout > 0 and fed.engine != "async":
+        raise ValueError("dispatch_timeout is the async engine's upload "
+                         f"timeout; engine={fed.engine!r} has no virtual "
+                         "clock to time out on")
+    if fed.retry_backoff <= 0:
+        raise ValueError(f"retry_backoff must be > 0; got {fed.retry_backoff}")
+    if fed.retry_cap < 0:
+        raise ValueError(f"retry_cap must be >= 0; got {fed.retry_cap}")
     key = jax.random.key(fed.seed)
     ckeys = jax.random.split(key, m)
     states = [strategy.init_state(task.init_client(ckeys[i])) for i in range(m)]
@@ -506,9 +547,55 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             sims.append(jnp.asarray(s_data))
         if fed.use_model_sim:
             sims.append(model_sim_src())
-        assert sims, "celora needs at least one similarity term"
+        if not sims:
+            raise ValueError(
+                f"celora needs at least one similarity term; got "
+                f"use_data_sim={fed.use_data_sim} (s_data "
+                f"{'set' if s_data is not None else 'unavailable'}), "
+                f"use_model_sim={fed.use_model_sim}")
         return aggregation.personalized_weights(sum(sims), fed.self_weight,
                                                 participants)
+
+    # ---- robust-mode setup (DESIGN.md §16).  Everything here is gated on
+    # `robust` so the fault-free config keeps the legacy eager paths.
+    adm_state = admission.init_state(adm.window) if adm.enabled else None
+    communicates = strategy.aggregate != "none"
+    per_b = per_down_b = per_e = 0
+    if robust and communicates:
+        # per-client byte constants (the robust paths price bytes per sent /
+        # accepted upload instead of per plan participant)
+        st0 = jax.tree.map(lambda l: jax.ShapeDtypeStruct((m,) + l.shape,
+                                                          l.dtype), states[0])
+        payload_struct = jax.eval_shape(strategy.uplink, st0)
+        per_down_b, per_e = comm.per_client_comm(payload_struct)
+        per_b = per_down_b
+        if compressed:
+            per_b, per_e = comm.per_client_comm(
+                compress.wire_struct(codec, payload_struct, m))
+    probes = None
+    if robust and strategy.aggregate == "personalized" and fed.use_model_sim:
+        # robust mode refreshes S^model row-masked (accepted clients only),
+        # which needs a valid previous matrix from round 0 — initialize from
+        # the initial Cs exactly as the scan engine does
+        p0 = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[strategy.uplink(s) for s in states])
+        r_pay = cka.stacked_cs(p0).shape[-1]
+        probes = jax.random.normal(jax.random.key(fed.seed + 97),
+                                   (fed.cka_probes, r_pay), jnp.float32)
+        s_model_prev[0] = cka.pairwise_model_similarity_stacked(
+            p0, jax.random.key(fed.seed + 97), fed.cka_probes)
+
+    def _masked_refresh(cs, sampled_ids, accept, smask):
+        """Robust S^model update: refresh rows of ACCEPTED clients only; a
+        pair touching a sampled-but-unaccepted client (its served C is
+        stale, corrupt, or undelivered) keeps its previous entry."""
+        refreshed = cka.refresh_rows_inline(
+            s_model_prev[0], cs, jnp.asarray(sampled_ids, jnp.int32), probes)
+        clean = jnp.logical_not(smask) | accept
+        valid = ((accept[:, None] & clean[None, :])
+                 | (accept[None, :] & clean[:, None]))
+        s_model_prev[0] = jnp.where(valid, refreshed, s_model_prev[0])
+        return s_model_prev[0]
 
     history: list[RoundRecord] = []
     accs = [0.0] * m        # replaced on round 0 (always an eval round)
@@ -519,6 +606,7 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             plan = plans[rnd]
             t0 = time.perf_counter()
             in_sample = plan.mask(m, which="sampled")
+            fd = fm.draw(m, rnd, fed.seed) if fm.active else None
             losses = []
             for i in range(m):
                 # ALWAYS draw — keeps per-client data RNG streams aligned
@@ -528,17 +616,38 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                     continue                    # unsampled: frozen this round
                 toks = jnp.asarray(np.stack([b["tokens"] for b in bt]))
                 labs = jnp.asarray(np.stack([b["labels"] for b in bt]))
+                prev_state = dict(states[i]) if fm.active else None
                 tr = strategy.trainable(states[i])
                 w_ref = states[i].get("w", {})
                 tr, loss = local_fit(tr, w_ref, toks, labs)
                 states[i].update(tr)
                 states[i] = strategy.after_local(states[i], fed.pfedme_eta)
                 losses.append(float(loss))
+                if fm.active and (fd.crash[i] or fd.divergent[i]):
+                    # crash: the round's local work is lost; divergent: the
+                    # client's divergence detection resets to the round start
+                    states[i] = prev_state
 
-            cmask = jnp.asarray(plan.mask(m)) if partial else None
+            smask_np = in_sample
+            pmask_np = plan.mask(m)
+            if fm.active:
+                sent_np = pmask_np & ~fd.crash      # left the device at all
+                delivered_np = sent_np & ~fd.loss   # reached the server
+                corr_np = delivered_np & fd.corrupt
+                div_np = smask_np & fd.divergent
+            else:
+                sent_np = delivered_np = pmask_np
+                corr_np = div_np = np.zeros(m, bool)
+            cmask = jnp.asarray(pmask_np) if partial else None
             # uplink trees for all m (a local op; absentees carry their
             # last-uploaded value) — masks below zero out the absent columns
             payloads = [strategy.uplink(s) for s in states]
+            if communicates and div_np.any():
+                # the divergent upload is the blowup the norm gate must catch
+                for i in np.nonzero(div_np)[0]:
+                    payloads[i] = jax.tree.map(
+                        lambda l: l * fm.divergent_scale, payloads[i])
+            encoded = None
             if compressed:
                 # encode for all m (key stream aligned with the vectorized
                 # paths); bytes are priced on the participants' ENCODED
@@ -547,26 +656,70 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                 encoded = [compress.encode_client(
                     codec, payloads[i], states[i]["ef"],
                     compress.client_key(fed.seed, rnd, i)) for i in range(m)]
-                rc = comm.round_comm_compressed_payloads(
-                    [encoded[i][0] for i in plan.participants],
-                    [payloads[i] for i in plan.participants])
                 served = [e[1] for e in encoded]
-                for i in plan.participants:
-                    states[i] = dict(states[i], ef=encoded[i][2])
+                if robust:
+                    rc = None                     # priced per sent/accepted
+                else:
+                    rc = comm.round_comm_compressed_payloads(
+                        [encoded[i][0] for i in plan.participants],
+                        [payloads[i] for i in plan.participants])
+                    for i in plan.participants:
+                        states[i] = dict(states[i], ef=encoded[i][2])
             else:
-                served = payloads
-                rc = comm.round_comm_payloads(
-                    [payloads[i] for i in plan.participants])
+                served = list(payloads)
+                rc = (None if robust and communicates else
+                      comm.round_comm_payloads(
+                          [payloads[i] for i in plan.participants]))
+            if communicates and corr_np.any():
+                for i in np.nonzero(corr_np)[0]:
+                    served[i] = faults.corrupt_one(
+                        codec if compressed else None,
+                        encoded[i][0] if compressed else None,
+                        served[i], fm.corrupt_mode)
+            accept_np = delivered_np
+            if robust and communicates:
+                if adm.enabled:
+                    served_st = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *served)
+                    norms, finite = admission.payload_stats(served_st)
+                    acc_mask, adm_state = admission.admit(
+                        norms, finite, jnp.asarray(delivered_np),
+                        adm_state, adm)
+                    accept_np = np.asarray(acc_mask)
+                cmask = jnp.asarray(accept_np)
+                if compressed:
+                    # EF advances only for ACCEPTED uploads — rejection
+                    # rolls the residual back by never installing the new one
+                    for i in np.nonzero(accept_np)[0]:
+                        states[i] = dict(states[i], ef=encoded[i][2])
+                rc = comm.RoundComm(
+                    uplink_bytes=per_b * int(sent_np.sum()),
+                    downlink_bytes=per_down_b * int(accept_np.sum()),
+                    uplink_elems=per_e * int(sent_np.sum()))
             weights = None
             if strategy.aggregate == "personalized":
-                cs_trees = (served if compressed else
+                cs_trees = (served if compressed or robust else
                             [tri_lora.tree_payload(s["adapter"])
                              for s in states])
-                weights = personalized(lambda: model_sim_from_cs(
-                    cka.stack_client_cs(cs_trees), plan), cmask)
+                if robust:
+                    weights = personalized(
+                        lambda: _masked_refresh(
+                            cka.stack_client_cs(cs_trees), plan.sampled,
+                            jnp.asarray(accept_np), jnp.asarray(smask_np)),
+                        cmask)
+                else:
+                    weights = personalized(lambda: model_sim_from_cs(
+                        cka.stack_client_cs(cs_trees), plan), cmask)
+            if robust and communicates:
+                for i in np.nonzero(~accept_np)[0]:
+                    # rejected/undelivered rows may hold NaN/Inf; their
+                    # weight is 0 but 0 x NaN still poisons the mix
+                    served[i] = jax.tree.map(jnp.zeros_like, served[i])
             downs = strategy.server(served, sample_counts=sample_counts,
                                     weights=weights, participants=cmask)
-            for i in plan.participants:
+            install_ids = (np.nonzero(accept_np)[0] if robust and communicates
+                           else plan.participants)
+            for i in install_ids:
                 states[i] = strategy.install(states[i], downs[i])
 
             evaluated = _do_eval(rnd, fed)
@@ -574,8 +727,12 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                 accs = [float(eval_fn(strategy.trainable(states[i]),
                               test_toks[i], test_labs[i]))
                         for i in range(m)]
-            history.append(_round_record(rnd, losses, accs, rc, plan, t0,
-                                         evaluated=evaluated))
+            history.append(_round_record(
+                rnd, losses, accs, rc, plan, t0, evaluated=evaluated,
+                rejected=(np.nonzero(delivered_np & ~accept_np)[0].tolist()
+                          if robust else []),
+                failed=(np.nonzero(pmask_np & (fd.crash | fd.loss))[0]
+                        .tolist() if fm.active else [])))
             if verbose:
                 _print_round(strategy, history[-1])
     else:
@@ -599,42 +756,98 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
             # partial participation the unsampled clients' results are
             # discarded by the select below, freezing their state exactly
             tr, losses = local_fit(tr, w_ref, put(toks), put(labs))
-            if partial:
+            smask_np = plan.mask(m, which="sampled")
+            pmask_np = plan.mask(m)
+            fd = fm.draw(m, rnd, fed.seed) if fm.active else None
+            if fm.active:
+                sent_np = pmask_np & ~fd.crash      # left the device at all
+                delivered_np = sent_np & ~fd.loss   # reached the server
+                corr_np = delivered_np & fd.corrupt
+                div_np = smask_np & fd.divergent
+            else:
+                sent_np = delivered_np = pmask_np
+                corr_np = div_np = np.zeros(m, bool)
+            if partial or fm.active:
                 prev = dict(stacked)
                 stacked.update(tr)
                 stacked = strategy.after_local(stacked, fed.pfedme_eta)
+                sel = smask_np
+                if fm.active:
+                    # crash: the round's local work is lost; divergent: the
+                    # client's divergence detection resets to the round start
+                    sel = sel & ~fd.crash & ~fd.divergent
                 stacked = client_batch.select_clients(
-                    jnp.asarray(plan.mask(m, which="sampled")), stacked, prev)
+                    jnp.asarray(sel), stacked, prev)
             else:
                 stacked.update(tr)
                 stacked = strategy.after_local(stacked, fed.pfedme_eta)
 
             payload = strategy.uplink(stacked)       # stacked tree or None
-            cmask = jnp.asarray(plan.mask(m)) if partial else None
+            if payload is not None and div_np.any():
+                # the divergent upload is the blowup the norm gate must catch
+                payload = faults.scale_rows(payload, jnp.asarray(div_np),
+                                            fm.divergent_scale)
+            cmask = jnp.asarray(pmask_np) if partial else None
+            enc = None
             if compressed:
                 enc, dec, ef_new = compress.encode_stacked(
                     codec, payload, stacked["ef"],
                     compress.client_keys(fed.seed, rnd, m))
                 rc = comm.round_comm_compressed_stacked(
                     enc, payload, plan.n_participants)
-                stacked = dict(stacked, ef=(
-                    client_batch.select_clients(cmask, ef_new, stacked["ef"])
-                    if partial else ef_new))
+                if not robust:
+                    stacked = dict(stacked, ef=(
+                        client_batch.select_clients(cmask, ef_new,
+                                                    stacked["ef"])
+                        if partial else ef_new))
                 served = dec
             else:
                 rc = comm.round_comm_stacked(payload, plan.n_participants)
                 served = payload
+            if payload is not None and corr_np.any():
+                served = faults.corrupt_served(
+                    codec if compressed else None, enc, served,
+                    jnp.asarray(corr_np), fm.corrupt_mode)
+            accept_np = delivered_np
+            if robust and payload is not None:
+                if adm.enabled:
+                    norms, finite = admission.payload_stats(served)
+                    acc_mask, adm_state = admission.admit(
+                        norms, finite, jnp.asarray(delivered_np),
+                        adm_state, adm)
+                    accept_np = np.asarray(acc_mask)
+                cmask = jnp.asarray(accept_np)
+                if compressed:
+                    # EF advances only for ACCEPTED uploads — rejection
+                    # rolls the residual back by never installing the new one
+                    stacked = dict(stacked, ef=client_batch.select_clients(
+                        cmask, ef_new, stacked["ef"]))
+                rc = comm.RoundComm(
+                    uplink_bytes=per_b * int(sent_np.sum()),
+                    downlink_bytes=per_down_b * int(accept_np.sum()),
+                    uplink_elems=per_e * int(sent_np.sum()))
             weights = None
             if strategy.aggregate == "personalized":
-                cs_src = (served if compressed
+                cs_src = (served if compressed or robust
                           else tri_lora.tree_payload(stacked["adapter"]))
-                weights = personalized(lambda: model_sim_from_cs(
-                    cka.stacked_cs(cs_src), plan), cmask)
+                if robust:
+                    weights = personalized(
+                        lambda: _masked_refresh(
+                            cka.stacked_cs(cs_src), plan.sampled, cmask,
+                            jnp.asarray(smask_np)),
+                        cmask)
+                else:
+                    weights = personalized(lambda: model_sim_from_cs(
+                        cka.stacked_cs(cs_src), plan), cmask)
+            if robust and payload is not None:
+                # rejected/undelivered rows may hold NaN/Inf; their weight
+                # is 0 but 0 x NaN still poisons the aggregation einsum
+                served = faults.zero_rows(served, cmask)
             down = strategy.server_stacked(served,
                                            sample_counts=sample_counts,
                                            weights=weights,
                                            participants=cmask)
-            if partial and down is not None:
+            if (partial or robust) and down is not None:
                 installed = strategy.install(stacked, down)
                 stacked = client_batch.select_clients(cmask, installed,
                                                       stacked)
@@ -647,8 +860,12 @@ def run_federated(task: FedTask, fed: FedConfig, client_train: list[dict],
                                    test_toks, test_labs)
                 accs = [float(a) for a in np.asarray(accs_arr)]
             round_losses = np.asarray(losses)[plan.sampled]
-            history.append(_round_record(rnd, round_losses, accs, rc,
-                                         plan, t0, evaluated=evaluated))
+            history.append(_round_record(
+                rnd, round_losses, accs, rc, plan, t0, evaluated=evaluated,
+                rejected=(np.nonzero(delivered_np & ~accept_np)[0].tolist()
+                          if robust else []),
+                failed=(np.nonzero(pmask_np & (fd.crash | fd.loss))[0]
+                        .tolist() if fm.active else [])))
             if verbose:
                 _print_round(strategy, history[-1])
         states = client_batch.unstack_states(stacked)
@@ -675,14 +892,17 @@ def _do_eval(rnd: int, fed: FedConfig) -> bool:
 
 def _round_record(rnd: int, losses, accs: list, rc: comm.RoundComm,
                   plan: sampling.ParticipationPlan, t0: float,
-                  evaluated: bool = True) -> RoundRecord:
+                  evaluated: bool = True, rejected: Optional[list] = None,
+                  failed: Optional[list] = None) -> RoundRecord:
     return RoundRecord(
         rnd, float(np.mean(losses)), accs,
         uplink_bytes=rc.uplink_bytes, downlink_bytes=rc.downlink_bytes,
         wall_s=time.perf_counter() - t0,
         participants=plan.participants.tolist(),
         sampled=plan.sampled.tolist(), dropped=plan.dropped.tolist(),
-        uplink_elems=rc.uplink_elems, evaluated=evaluated)
+        uplink_elems=rc.uplink_elems, evaluated=evaluated,
+        rejected=[int(i) for i in (rejected or [])],
+        failed=[int(i) for i in (failed or [])])
 
 
 def _print_round(strategy: Strategy, rec: RoundRecord) -> None:

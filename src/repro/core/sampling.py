@@ -186,6 +186,21 @@ class LatencyModel:
             return self.scale * np.exp(self.sigma * rng.standard_normal(m))
         return self.scale * rng.exponential(1.0, size=m)
 
+    def draw_retry(self, wave: int, client: int, attempt: int,
+                   seed: int) -> float:
+        """One RE-dispatch latency for ``(wave, client)``, ``attempt >= 1``
+        — keyed ``(seed, wave, client, attempt, _LATENCY_TAG)`` so each
+        retry re-rolls its latency independently of the wave draw (which
+        is ``attempt == 0``) and of every other client's stream."""
+        if self.kind == "uniform":
+            return float(self.scale)
+        rng = np.random.default_rng(
+            (seed, int(wave), int(client), int(attempt), _LATENCY_TAG))
+        if self.kind == "lognormal":
+            return float(self.scale * np.exp(
+                self.sigma * rng.standard_normal()))
+        return float(self.scale * rng.exponential(1.0))
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanStack:

@@ -206,8 +206,8 @@ def make_fed_round_step(cfg: ModelConfig, mesh: Mesh, lr: float = 1e-4,
             try:
                 return jax.lax.with_sharding_constraint(
                     x, P("pod", "data", *([None] * (x.ndim - 2))))
-            except Exception:
-                return x
+            except (ValueError, TypeError):
+                return x  # spec incompatible with the mesh — advisory
         batch_p = jax.tree.map(split, batch)
 
         with layers.hint_batch_axes(("data",)):

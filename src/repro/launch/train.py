@@ -86,8 +86,12 @@ def run(arch: str = "fed-100m", clients: int = 4, rounds: int = 10,
         staleness_decay: float = 1.0, latency: str = "uniform",
         latency_scale: float = 1.0, latency_sigma: float = 0.5,
         attn_impl: str | None = None) -> dict:
-    assert client_parallelism in ("loop", "vmap"), client_parallelism
-    assert engine in ("eager", "scan", "async"), engine
+    if client_parallelism not in ("loop", "vmap"):
+        raise ValueError(f"client_parallelism={client_parallelism!r}; "
+                         f"expected 'loop' or 'vmap'")
+    if engine not in ("eager", "scan", "async"):
+        raise ValueError(f"engine={engine!r}; "
+                         f"expected 'eager', 'scan', or 'async'")
     vectorized = client_parallelism == "vmap"
     if engine in ("scan", "async") and not vectorized:
         raise ValueError(f"engine={engine!r} runs on the stacked client "

@@ -143,8 +143,8 @@ def _head_parallel(q, k, v):
             b_ax = axes if x.shape[0] % total == 0 else None
             return jax.lax.with_sharding_constraint(
                 x, jax.sharding.PartitionSpec(b_ax, None, "model", None))
-        except Exception:
-            return x
+        except (ValueError, TypeError):
+            return x  # spec incompatible with the mesh — hint is advisory
     return hint(q), hint(k), hint(v)
 
 
@@ -211,8 +211,8 @@ def blockwise_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         try:
             return jax.lax.with_sharding_constraint(
                 a, jax.sharding.PartitionSpec(b_ax, None, "model", None))
-        except Exception:
-            return a
+        except (ValueError, TypeError):
+            return a  # spec incompatible with the mesh — hint is advisory
     kt = _kv_hint(kt)
     vt = _kv_hint(vt)
 

@@ -58,8 +58,8 @@ def _ambient_mesh():
         pm = _mesh_lib.thread_resources.env.physical_mesh
         if pm is not None and not pm.empty:
             return pm
-    except Exception:
-        pass
+    except (ImportError, AttributeError):
+        pass  # private-module layout changed across jax versions
     return None
 
 
@@ -78,8 +78,8 @@ def shard_hint(x: jnp.ndarray, *spec) -> jnp.ndarray:
     try:
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.PartitionSpec(*spec))
-    except Exception:
-        return x
+    except (ValueError, TypeError):
+        return x  # spec incompatible with the mesh/shape — hint is advisory
 
 
 _BATCH_AXES = ("pod", "data")
@@ -126,8 +126,8 @@ def batch_hint(x: jnp.ndarray, *, seq_parallel: bool = False) -> jnp.ndarray:
     try:
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.PartitionSpec(*spec))
-    except Exception:
-        return x
+    except (ValueError, TypeError):
+        return x  # spec incompatible with the mesh/shape — hint is advisory
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +290,6 @@ def unembed(x: jnp.ndarray, table: jnp.ndarray,
         try:
             logits = jax.lax.with_sharding_constraint(
                 logits, jax.sharding.PartitionSpec(*spec))
-        except Exception:
-            pass
+        except (ValueError, TypeError):
+            pass  # spec incompatible with the mesh/shape — hint is advisory
     return logits

@@ -266,3 +266,91 @@ def test_latency_model_kinds():
         sampling.LatencyModel("gaussian")
     with pytest.raises(ValueError):
         sampling.LatencyModel("uniform", scale=0.0)
+
+
+# ---------------------------------------------------------------------------
+# retry / timeout / backoff (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+_STORM_KW = dict(latency="lognormal", latency_sigma=1.0, buffer_size=2,
+                 dispatch_timeout=4.0, retry_backoff=0.5, retry_cap=5,
+                 fault_crash=0.15, fault_loss=0.25, fault_corrupt=0.25,
+                 admission="norm", seed=9)
+
+
+def test_async_retry_storm_deterministic(fed_setup):
+    """A retry storm — timeouts, crashes re-queued, lost uplinks
+    re-dispatched with exponential backoff, corrupted uplinks rejected at
+    admission — is still a pure function of (seed, config): two identical
+    runs are bit-equal, virtual clock included."""
+    a = _run(fed_setup, "celora", "async", rounds=3, **_STORM_KW)
+    b = _run(fed_setup, "celora", "async", rounds=3, **_STORM_KW)
+    assert any(r.rejected for r in a["history"])      # the storm fired …
+    assert np.isfinite([r.train_loss for r in a["history"]]).all()  # … safely
+    for ra, rb in zip(a["history"], b["history"]):
+        assert ra.train_loss == rb.train_loss
+        assert ra.accs == rb.accs
+        assert ra.participants == rb.participants
+        assert ra.rejected == rb.rejected
+        assert ra.failed == rb.failed
+        assert ra.uplink_bytes == rb.uplink_bytes
+    assert a["sim_times"] == b["sim_times"]
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a["states"], b["states"])
+
+
+def test_async_retry_pays_backoff_and_bytes(fed_setup):
+    """Lost uplinks cost wall-clock (timeout + backoff pushes the virtual
+    clock out) and wire bytes (every transmitted attempt is priced), so the
+    faulted run is strictly more expensive than the fault-free one."""
+    clean = _run(fed_setup, "celora", "async", rounds=3,
+                 **{**_STORM_KW, "fault_crash": 0.0, "fault_loss": 0.0,
+                    "fault_corrupt": 0.0})
+    storm = _run(fed_setup, "celora", "async", rounds=3, **_STORM_KW)
+    assert storm["sim_times"][-1] > clean["sim_times"][-1]
+    assert (sum(r.uplink_bytes for r in storm["history"])
+            > sum(r.uplink_bytes for r in clean["history"]))
+
+
+def test_async_zero_fault_retry_knobs_inert(fed_setup):
+    """An unreachable timeout with zero fault rates must not perturb the
+    schedule: bit-equal to the legacy async run (the widened bookkeeping
+    is pure observation)."""
+    kw = _async_kw()
+    ref = _run(fed_setup, "celora", "async", rounds=3, **kw)
+    out = _run(fed_setup, "celora", "async", rounds=3,
+               dispatch_timeout=1e9, retry_backoff=0.5, retry_cap=2, **kw)
+    for ra, rb in zip(ref["history"], out["history"]):
+        assert ra.train_loss == rb.train_loss
+        assert ra.accs == rb.accs
+        assert ra.uplink_bytes == rb.uplink_bytes
+    assert ref["sim_times"] == out["sim_times"]
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), ref["states"], out["states"])
+
+
+def test_async_retry_storm_resume(fed_setup, tmp_path):
+    """Kill-then-resume mid-retry-storm with the int8 EF codec: in-flight
+    attempt counters, the admission ring, and the EF rollback snapshots
+    all ride the checkpoint, so the resumed run is bit-equal to the
+    uninterrupted one."""
+    kw = dict(_STORM_KW, uplink_codec="int8", chunk_rounds=1)
+    p = str(tmp_path / "storm.npz")
+    full = _run(fed_setup, "celora", "async", rounds=4, **kw)
+    _run(fed_setup, "celora", "async", rounds=2, checkpoint_path=p, **kw)
+    res = _run(fed_setup, "celora", "async", rounds=4, checkpoint_path=p,
+               resume=True, **kw)
+    for ra, rb in zip(full["history"], res["history"]):
+        assert ra.train_loss == rb.train_loss
+        assert ra.accs == rb.accs
+        assert ra.participants == rb.participants
+        assert ra.rejected == rb.rejected
+        assert ra.failed == rb.failed
+        assert ra.uplink_bytes == rb.uplink_bytes
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), full["states"], res["states"])
+
+
+def test_dispatch_timeout_requires_async(fed_setup):
+    with pytest.raises(ValueError, match="dispatch_timeout"):
+        _run(fed_setup, "celora", "scan", dispatch_timeout=4.0)

@@ -110,6 +110,54 @@ def test_restore_missing_leaf_is_clear_error(tmp_path):
         ckpt.restore(path, {"w": jnp.zeros((4,)), "extra": jnp.zeros((2,))})
 
 
+def test_truncated_checkpoint_is_clear_error(tmp_path):
+    """A half-written .npz (kill mid-write, disk full) must fail with a
+    clear ValueError at restore, not an opaque BadZipFile/EOFError."""
+    path = str(tmp_path / "s.npz")
+    tree = {"w": jnp.arange(256.0)}
+    ckpt.save(path, tree)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(ValueError, match="truncated or corrupted"):
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    with pytest.raises(ValueError, match="truncated or corrupted"):
+        ckpt.verify(path)
+
+
+def test_doctored_checkpoint_fails_checksum(tmp_path):
+    """Bit rot / doctoring that leaves the zip container intact is caught
+    by the content checksum: a leaf modified after save (stale
+    ``__checksum__`` carried along) is refused with the stored vs
+    recomputed CRCs named."""
+    path = str(tmp_path / "s.npz")
+    tree = {"w": jnp.arange(8.0)}
+    ckpt.save(path, tree, metadata={"seed": 0})
+    ckpt.verify(path)                                  # pristine: passes
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    arrays["w"] = arrays["w"] + 1.0                    # flip the payload …
+    np.savez(path.removesuffix(".npz"), **arrays)      # … keep the checksum
+    with pytest.raises(ValueError, match="content checksum"):
+        ckpt.verify(path)
+    with pytest.raises(ValueError, match="content checksum"):
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_checksumless_checkpoint_passes_unverified(tmp_path):
+    """Checkpoints written before the checksum existed must keep restoring
+    (verify() passes them unverified rather than refusing)."""
+    path = str(tmp_path / "s.npz")
+    tree = {"w": jnp.arange(8.0)}
+    ckpt.save(path, tree)
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files if k != "__checksum__"}
+    np.savez(path.removesuffix(".npz"), **arrays)
+    ckpt.verify(path)
+    out = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8.0))
+
+
 def test_metadata_missing_is_empty(tmp_path):
     path = str(tmp_path / "s.npz")
     ckpt.save(path, {"w": jnp.zeros((4,))})
@@ -187,7 +235,10 @@ def test_resume_accepts_pre_store_checkpoint(tmp_path, tiny_cfg):
     meta = ckpt.metadata(path)
     assert meta.pop("client_store") == "device"     # field exists today …
     with np.load(path) as z:                        # … doctor it out
-        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        # a genuinely old file predates the content checksum too — drop it
+        # (keeping it would correctly trip ckpt.verify on the rewrite)
+        arrays = {k: z[k] for k in z.files
+                  if k not in ("__meta__", "__checksum__")}
     import json
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode(), np.uint8).copy()

@@ -111,6 +111,33 @@ def test_error_feedback_telescopes():
     assert float(jnp.max(jnp.abs(ef["c"]))) < 2 * amax
 
 
+def test_error_feedback_telescopes_with_rejections():
+    """Admission control (DESIGN.md §16) rolls a REJECTED uplink's EF
+    residual back to its pre-dispatch value, so the telescope restricts to
+    the accepted subsequence: Σ_{t accepted} dequant_t ==
+    Σ_{t accepted} payload_t − e_T.  Without the rollback, a rejected
+    round's residual would absorb a payload the server never installed
+    and the identity would break."""
+    codec = compress.get_codec("int8")
+    base = {"c": jax.random.normal(jax.random.key(5), (2, 4, 4))}
+    ef = compress.init_ef(base)
+    tot_dec = jax.tree.map(jnp.zeros_like, base)
+    tot_true = jax.tree.map(jnp.zeros_like, base)
+    for t in range(25):
+        p = jax.tree.map(lambda l: l * (1.0 + 0.07 * t), base)
+        _, dec, ef_new = compress.encode_client(codec, p, ef,
+                                                jax.random.key(100 + t))
+        if t % 3 == 0:      # every third uplink rejected at admission
+            continue        # … EF stays at its pre-dispatch snapshot
+        ef = ef_new
+        tot_dec = jax.tree.map(lambda a, b: a + b, tot_dec, dec)
+        tot_true = jax.tree.map(lambda a, b: a + b, tot_true, p)
+    jax.tree.map(
+        lambda d, tr, e: np.testing.assert_allclose(
+            np.asarray(d), np.asarray(tr - e), atol=5e-5),
+        tot_dec, tot_true, ef)
+
+
 def test_encoded_bytes_formula():
     """Wire bytes are exactly codes + scales: for an n-element leaf with
     tile t, int8 costs n_pad bytes of codes + 2·n_tiles of bf16 scales and

@@ -1,0 +1,368 @@
+"""Fault-tolerant runtime (repro.core.faults / repro.core.admission,
+DESIGN.md §16): seeded fault-schedule determinism, payload mangling,
+the admission gate's finite/norm rejection and ring state, engine parity
+(loop ⇄ vmap ⇄ scan ⇄ cohort) under an active fault schedule, history
+finiteness under NaN corruption with admission on, zero-fault bitwise
+equivalence with the legacy runtime, kill-then-resume mid-fault-storm,
+and grep-style regressions for the bare-assert / broad-except sweeps."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admission, faults
+from repro.core.fed_model import FedTask
+from repro.core.federated import FedConfig, run_federated
+from repro.data import partition, synthetic
+
+# ---------------------------------------------------------------------------
+# unit: fault model
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="fault_crash"):
+        faults.FaultModel(crash=1.0)
+    with pytest.raises(ValueError, match="fault_loss"):
+        faults.FaultModel(loss=-0.1)
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        faults.FaultModel(corrupt=0.1, corrupt_mode="zstd")
+    with pytest.raises(ValueError, match="divergent_scale"):
+        faults.FaultModel(divergent=0.1, divergent_scale=0.5)
+
+
+def test_inactive_model_draws_nothing():
+    fm = faults.FaultModel()
+    assert not fm.active
+    assert fm.draw_one(3, 1, seed=0) == (False, False, False, False)
+    d = fm.draw(5, 3, seed=0)
+    for ev in faults.FAULT_EVENTS:
+        assert not getattr(d, ev).any()
+
+
+def test_fault_schedule_deterministic():
+    """Same (seed, round, client, attempt) → same events; the stacked draw
+    is elementwise the per-client draw (loop ⇄ vmap ⇄ scan parity); the
+    attempt index re-rolls a retried client's fate."""
+    fm = faults.FaultModel(crash=0.3, loss=0.3, corrupt=0.3, divergent=0.3)
+    assert fm.active
+    d = fm.draw(16, rnd=2, seed=7)
+    for i in range(16):
+        assert fm.draw_one(2, i, seed=7) == (
+            bool(d.crash[i]), bool(d.loss[i]),
+            bool(d.corrupt[i]), bool(d.divergent[i]))
+    assert fm.draw_one(2, 3, seed=7) == fm.draw_one(2, 3, seed=7)
+    draws = {fm.draw_one(2, 3, seed=7, attempt=a) for a in range(40)}
+    assert len(draws) > 1                      # retries re-roll
+    # rates are honored in aggregate
+    many = fm.draw(4000, rnd=0, seed=1)
+    assert abs(many.crash.mean() - 0.3) < 0.05
+
+
+def test_corrupt_rows_modes():
+    x = {"c": jnp.ones((4, 2, 3))}
+    mask = jnp.asarray([False, True, False, True])
+    bad = faults.corrupt_rows(x, mask, "nan")["c"]
+    assert np.all(np.isnan(np.asarray(bad)[[1, 3]]))
+    assert np.array_equal(np.asarray(bad)[[0, 2]], np.ones((2, 2, 3)))
+    bad = faults.corrupt_rows(x, mask, "inf")["c"]
+    assert np.all(np.isinf(np.asarray(bad)[[1, 3]]))
+    x3 = {"c": jnp.ones((4, 2, 3)) * 3.0}
+    bad = faults.corrupt_rows(x3, mask, "bitflip")["c"]
+    assert not np.array_equal(np.asarray(bad)[1], np.asarray(x3["c"])[1])
+    assert np.array_equal(np.asarray(bad)[[0, 2]], np.asarray(x3["c"])[[0, 2]])
+    assert np.all(np.isfinite(np.asarray(bad)))       # 3.0 flips to a denormal
+
+
+def test_scale_and_zero_rows():
+    x = {"c": jnp.ones((3, 2))}
+    mask = jnp.asarray([True, False, False])
+    scaled = faults.scale_rows(x, mask, 1e4)["c"]
+    assert float(scaled[0, 0]) == 1e4 and float(scaled[1, 0]) == 1.0
+    poisoned = faults.corrupt_rows(x, ~mask, "nan")
+    clean = faults.zero_rows(poisoned, mask)["c"]     # NaN rows sanitized
+    assert np.array_equal(np.asarray(clean),
+                          [[1.0, 1.0], [0.0, 0.0], [0.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# unit: admission gate
+# ---------------------------------------------------------------------------
+
+
+def test_admission_validation():
+    with pytest.raises(ValueError, match="admission="):
+        admission.AdmissionControl(mode="strict")
+    with pytest.raises(ValueError, match="norm_mult"):
+        admission.AdmissionControl(mode="norm", norm_mult=0.0)
+    with pytest.raises(ValueError, match="window"):
+        admission.AdmissionControl(mode="norm", window=0)
+
+
+def test_admission_rejects_nonfinite_and_outliers():
+    ctl = admission.AdmissionControl(mode="norm", norm_mult=10.0, window=4)
+    st = admission.init_state(ctl.window)
+    payload = {"c": jnp.stack([jnp.ones((2, 2)) * s
+                               for s in (1.0, 1.2, jnp.nan, 1000.0)])}
+    norms, finite = admission.payload_stats(payload)
+    assert bool(finite[0]) and not bool(finite[2])
+    cand = jnp.ones(4, bool)
+    accept, st = admission.admit(norms, finite, cand, st, ctl)
+    # cold start: reference = this round's own masked median → the 1000×
+    # row and the NaN row are rejected, the ordinary rows pass
+    assert accept.tolist() == [True, True, False, False]
+    assert int(st["count"]) == 1
+    # with history, the reference is the ring median — a second round of
+    # only-outliers is fully rejected and does NOT advance the ring
+    norms2 = jnp.asarray([500.0, 900.0, 700.0, 600.0])
+    accept2, st2 = admission.admit(norms2, jnp.ones(4, bool), cand, st, ctl)
+    assert not bool(accept2.any())
+    assert int(st2["count"]) == int(st["count"])
+    np.testing.assert_array_equal(np.asarray(st2["meds"]),
+                                  np.asarray(st["meds"]))
+
+
+def test_admission_candidates_mask_scopes_the_gate():
+    """Non-candidate rows (undelivered uplinks) are invisible: excluded
+    from the median AND never accepted."""
+    ctl = admission.AdmissionControl(mode="norm", norm_mult=2.0, window=4)
+    st = admission.init_state(ctl.window)
+    norms = jnp.asarray([1.0, 1.0, 1e6, 1.0])
+    cand = jnp.asarray([True, True, False, True])
+    accept, _ = admission.admit(norms, jnp.ones(4, bool), cand, st, ctl)
+    assert accept.tolist() == [True, True, False, True]
+
+
+def test_admission_disabled_by_default():
+    fed = FedConfig()
+    assert not admission.control_of(fed).enabled
+    assert not faults.fault_model_of(fed).active
+
+
+# ---------------------------------------------------------------------------
+# integration: the four engines under one fault schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fed_setup(tiny_cfg):
+    n_classes, seq = 4, 16
+    tr = synthetic.make_classification_data(0, 600, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    te = synthetic.make_classification_data(1, 300, seq, tiny_cfg.vocab_size,
+                                            n_classes, class_sep=1.5)
+    m = 4
+    trs = partition.dirichlet_partition(0, tr.labels, m, 0.5)
+    tes = partition.dirichlet_partition(0, te.labels, m, 0.5)
+    ctrain = [{"tokens": tr.tokens[s], "labels": tr.labels[s]} for s in trs]
+    ctest = [{"tokens": te.tokens[s], "labels": te.labels[s]} for s in tes]
+    task = FedTask.create(jax.random.key(0), tiny_cfg, n_classes)
+    return task, ctrain, ctest, m
+
+
+# one storm recipe reused across the parity/resume tests: every event kind
+# fires somewhere in 4 rounds × 4 clients at these rates (seed-pinned)
+STORM = dict(fault_crash=0.15, fault_loss=0.2, fault_corrupt=0.25,
+             fault_divergent=0.15, admission="norm", seed=11)
+
+
+def _run(fed_setup, engine, rounds=3, store="device", **kw):
+    task, ctrain, ctest, m = fed_setup
+    kw.setdefault("method", "celora")
+    kw.setdefault("chunk_rounds", 2)
+    kw.setdefault("use_data_sim", False)      # CKA-only: no GMM fit per run
+    kw.setdefault("cka_probes", 8)
+    fed = FedConfig(n_clients=m, rounds=rounds,
+                    local_steps=2, batch_size=8, lr=1e-2, engine=engine,
+                    client_store=store, **kw)
+    return run_federated(task, fed, ctrain, ctest)
+
+
+def _assert_history_close(ref, out, states_atol=5e-4):
+    """Engine parity extends to the fault layer: identical fault outcomes
+    (failed/rejected), identical byte accounting, allclose metrics."""
+    assert len(ref["history"]) == len(out["history"])
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.sampled == r_out.sampled
+        assert r_ref.participants == r_out.participants
+        assert r_ref.failed == r_out.failed
+        assert r_ref.rejected == r_out.rejected
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+        assert r_ref.downlink_bytes == r_out.downlink_bytes
+        assert r_ref.uplink_elems == r_out.uplink_elems
+        assert abs(r_ref.train_loss - r_out.train_loss) < 1e-4
+        np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-3)
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=states_atol), s_ref, s_out)
+
+
+@pytest.mark.parametrize("engine,parallelism,store", [
+    ("eager", "vmap", "device"),
+    ("scan", "vmap", "device"),
+    ("scan", "vmap", "host"),
+])
+def test_fault_storm_engine_parity(fed_setup, engine, parallelism, store):
+    """One seeded fault storm, four execution paths, one history: the loop
+    path is the reference; vmap/scan/cohort must reproduce its fault
+    outcomes exactly and its metrics to the §9 tolerances."""
+    ref = _run(fed_setup, "eager", client_parallelism="loop", **STORM)
+    assert any(r.failed or r.rejected for r in ref["history"])
+    out = _run(fed_setup, engine, client_parallelism=parallelism,
+               store=store, **STORM)
+    _assert_history_close(ref, out)
+
+
+def test_fault_storm_parity_compressed(fed_setup):
+    """The storm composes with the int8 EF codec: corruption mangles the
+    decoded rows, rejection rolls the EF residual back, and loop ⇄ scan
+    still agree."""
+    kw = dict(STORM, uplink_codec="int8", fault_corrupt_mode="bitflip")
+    ref = _run(fed_setup, "eager", client_parallelism="loop", **kw)
+    out = _run(fed_setup, "scan", **kw)
+    _assert_history_close(ref, out)
+
+
+def test_history_finite_under_nan_corruption(fed_setup):
+    """The ISSUE acceptance bar: NaN corruption at a heavy rate with the
+    admission gate on — the run completes, every metric and final state
+    stays finite, and the gate visibly rejected something."""
+    out = _run(fed_setup, "scan", rounds=4, fault_corrupt=0.5,
+               fault_corrupt_mode="nan", admission="norm", seed=5)
+    rejected = [c for r in out["history"] for c in r.rejected]
+    assert rejected, "storm never fired — pick a different seed"
+    for r in out["history"]:
+        assert np.isfinite(r.train_loss)
+        assert np.all(np.isfinite(r.accs))
+    for s in out["states"]:
+        jax.tree.map(lambda l: np.all(np.isfinite(np.asarray(l))) or
+                     pytest.fail("non-finite state leaf"), s)
+
+
+def test_divergent_uplink_caught_by_norm_gate(fed_setup):
+    """A divergent fit ships a finite-but-huge payload — exactly what the
+    finite check alone cannot catch; the norm gate must."""
+    out = _run(fed_setup, "scan", rounds=3, fault_divergent=0.3,
+               admission="norm", seed=2)
+    rejected = [c for r in out["history"] for c in r.rejected]
+    assert rejected
+    for r in out["history"]:
+        assert np.isfinite(r.train_loss)
+        assert np.all(np.isfinite(r.accs))
+
+
+def test_zero_fault_config_is_bitwise_legacy(fed_setup):
+    """faults=none + admission=none (the defaults, here set explicitly)
+    must trace the legacy program: bit-identical history and states."""
+    ref = _run(fed_setup, "scan", seed=3)
+    out = _run(fed_setup, "scan", seed=3, fault_crash=0.0, fault_loss=0.0,
+               fault_corrupt=0.0, fault_divergent=0.0, admission="none")
+    for r_ref, r_out in zip(ref["history"], out["history"]):
+        assert r_ref.train_loss == r_out.train_loss
+        assert r_ref.accs == r_out.accs
+        assert r_ref.uplink_bytes == r_out.uplink_bytes
+        assert r_out.rejected == [] and r_out.failed == []
+    for s_ref, s_out in zip(ref["states"], out["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_ref, s_out)
+
+
+def test_admission_on_zero_faults_accepts_everything(fed_setup):
+    """The gate alone (no faults) must be inert on healthy traffic: no
+    rejections, same history as the legacy run to the §9 tolerances, in
+    both the eager and scan engines."""
+    ref = _run(fed_setup, "scan", seed=3)
+    for engine in ("eager", "scan"):
+        out = _run(fed_setup, engine, seed=3, admission="norm")
+        assert all(r.rejected == [] for r in out["history"])
+        for r_ref, r_out in zip(ref["history"], out["history"]):
+            assert r_ref.participants == r_out.participants
+            assert r_ref.uplink_bytes == r_out.uplink_bytes
+            assert abs(r_ref.train_loss - r_out.train_loss) < 1e-4
+            np.testing.assert_allclose(r_ref.accs, r_out.accs, atol=1e-3)
+
+
+def test_admission_requires_communication(fed_setup):
+    with pytest.raises(ValueError, match="admission"):
+        _run(fed_setup, "eager", method="lora_loc", admission="norm")
+
+
+def _run_kw(fed_setup, rounds, path, resume, **kw):
+    return _run(fed_setup, "scan", rounds=rounds, checkpoint_path=path,
+                resume=resume, **kw)
+
+
+@pytest.mark.parametrize("store", ["device", "host"])
+def test_fault_storm_resume_exact(fed_setup, tmp_path, store):
+    """Kill-then-resume mid-fault-storm with the int8 EF codec: the resumed
+    run re-derives the fault schedule AND the admission-gate ring from the
+    checkpoint, reproducing the uninterrupted history exactly."""
+    kw = dict(STORM, uplink_codec="int8", store=store)
+    path = str(tmp_path / f"storm-{store}.npz")
+    full = _run(fed_setup, "scan", rounds=6, **kw)
+    _run(fed_setup, "scan", rounds=4, checkpoint_path=path, **kw)
+    res = _run(fed_setup, "scan", rounds=6, checkpoint_path=path,
+               resume=True, **kw)
+    for r_full, r_res in zip(full["history"], res["history"]):
+        assert r_full.train_loss == r_res.train_loss
+        assert r_full.accs == r_res.accs
+        assert r_full.participants == r_res.participants
+        assert r_full.failed == r_res.failed
+        assert r_full.rejected == r_res.rejected
+        assert r_full.uplink_bytes == r_res.uplink_bytes
+    for s_full, s_res in zip(full["states"], res["states"]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_full, s_res)
+
+
+def test_resume_rejects_fault_config_change(fed_setup, tmp_path):
+    """The fault/admission knobs join the resume fingerprint: silently
+    changing the storm mid-run is refused."""
+    path = str(tmp_path / "fp.npz")
+    _run(fed_setup, "scan", rounds=2, checkpoint_path=path, **STORM)
+    with pytest.raises(ValueError, match="different run configuration"):
+        _run(fed_setup, "scan", rounds=4, checkpoint_path=path, resume=True,
+             **dict(STORM, fault_loss=0.5))
+
+
+# ---------------------------------------------------------------------------
+# grep-style regressions: the bare-assert / broad-except sweeps stay swept
+# ---------------------------------------------------------------------------
+
+def _source_of(mod):
+    import inspect
+    return inspect.getsource(mod)
+
+
+def test_no_bare_asserts_in_runtime_modules():
+    """User-facing validation must raise ValueError (asserts vanish under
+    ``python -O``); the runtime modules carry no bare assert statements."""
+    from repro.core import baselines, client_store, fed_engine, federated
+    from repro.launch import train
+    for mod in (federated, fed_engine, client_store, baselines, train):
+        bare = re.findall(r"^\s*assert .*$", _source_of(mod), re.M)
+        assert not bare, f"{mod.__name__}: {bare}"
+
+
+def test_no_broad_excepts_in_model_modules():
+    """The fallback paths catch the specific exceptions they handle, not
+    ``except Exception`` (which once swallowed real shape bugs)."""
+    from repro.launch import steps
+    from repro.models import attention, layers
+    for mod in (layers, attention, steps):
+        broad = re.findall(r"^\s*except Exception\b.*$", _source_of(mod),
+                           re.M)
+        assert not broad, f"{mod.__name__}: {broad}"
+
+
+def test_validation_errors_not_asserts(fed_setup):
+    """The swept call sites raise ValueError with the offending value."""
+    from repro.core.baselines import STRATEGIES
+    task, ctrain, ctest, m = fed_setup
+    fed = FedConfig(n_clients=m, rounds=1, client_parallelism="threads")
+    with pytest.raises(ValueError, match="threads"):
+        run_federated(task, fed, ctrain, ctest)
+    with pytest.raises(ValueError, match="weights=None"):
+        STRATEGIES["celora"].server([], sample_counts=[], weights=None)
